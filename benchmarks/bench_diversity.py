@@ -1,0 +1,36 @@
+"""Search-diversity ablation for the beyond-paper selection variants.
+
+Metric: unique leaves selected per superstep / p (higher = better worker
+spread).  faithful (paper pipeline semantics) vs wavefront (rank-based
+repulsion, chain D instead of p*D) vs relaxed (no intra-superstep
+repulsion — demonstrates why repulsion is required)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core import TreeConfig, TreeParallelMCTS
+from benchmarks.common import NullSim
+from repro.envs import BanditTreeEnv
+
+
+def run(p=32, supersteps=6):
+    cfg = TreeConfig(X=4096, F=6, D=8)
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    rows = []
+    for ex in ("faithful", "wavefront", "relaxed"):
+        m = TreeParallelMCTS(cfg, env, NullSim(), p=p, executor=ex)
+        uniq = []
+        for _ in range(supersteps):
+            sel = m.superstep()
+            uniq.append(len(np.unique(sel["leaves"])) / p)
+        frac = float(np.mean(uniq[1:]))
+        csv_line(f"diversity_unique_leaf_frac_{ex}", frac * 100,
+                 f"frac={frac:.3f}")
+        rows.append((ex, frac))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Table I analogue: accelerator memory for the UCT at the paper's full
+benchmark scales, against the TPU VMEM budget (the paper reports FPGA
+SRAM: 24 MB / 69% for Pong, 16 MB / 46% for Gomoku on a U200)."""
+
+from __future__ import annotations
+
+from benchmarks.common import csv_line
+from repro.configs.gomoku_cfg import TREE as GOMOKU
+from repro.configs.pong import TREE as PONG
+from repro.envs import GomokuEnv, PongLiteEnv
+
+VMEM_BUDGET = 128 * 1024 * 1024  # v5e VMEM per core
+
+
+def run():
+    rows = []
+    for name, cfg, env in (("pong", PONG, PongLiteEnv()),
+                           ("gomoku", GOMOKU, GomokuEnv())):
+        b = cfg.sram_bytes()
+        frac = b["total_bytes"] / VMEM_BUDGET
+        csv_line(f"table1_uct_bytes_{name}", b["total_bytes"] / 1e6,
+                 f"MB={b['total_bytes']/2**20:.1f};vmem_frac={frac:.2%};"
+                 f"edge_MB={b['edge_bytes']/2**20:.1f}")
+        st_bytes = env.state_shape[0] * 4
+        csv_line(f"table1_st_bytes_per_state_{name}", st_bytes,
+                 f"host_table_MB={st_bytes*cfg.X/2**20:.1f}")
+        rows.append((name, b, st_bytes))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

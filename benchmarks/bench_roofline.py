@@ -1,0 +1,48 @@
+"""Roofline summary: reads the dry-run artifacts (artifacts/dryrun/*.json)
+and prints the per-cell three-term roofline table (also emitted as CSV
+rows for run.py)."""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+from benchmarks.common import csv_line
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_records(mesh="single"):
+    recs = []
+    if not ART.exists():
+        return recs
+    for p in sorted(ART.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def run(mesh="single"):
+    recs = load_records(mesh)
+    if not recs:
+        print("# no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun` first")
+        return []
+    rows = []
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{mesh}"
+        total = r["compute_s"] + 0  # step time bound = max(terms)
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        frac = r["compute_s"] / bound if bound else 0.0
+        csv_line(
+            name, bound * 1e6,
+            f"dom={r['dominant']};compute_s={r['compute_s']:.3e};"
+            f"memory_s={r['memory_s']:.3e};collective_s={r['collective_s']:.3e};"
+            f"roofline_frac={frac:.3f};useful={r['useful_flops_ratio']:.2f}")
+        rows.append(r)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

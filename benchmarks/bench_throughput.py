@@ -1,0 +1,57 @@
+"""Fig. 5 analogue: system throughput (simulation requests / second) and
+MCTS-step breakdown (Simulation vs other operations), CPU-only reference
+vs accelerated executors, with REAL simulation backends:
+  pong   — software rollouts (paper: OpenAI-gym),
+  gomoku — policy-value DNN inference (paper: AlphaZero-Gomoku net).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import csv_line, run_supersteps
+from repro.core import TreeConfig, RolloutBackend
+from repro.envs import BanditTreeEnv, GomokuEnv
+from repro.envs.policy_net import NNSimBackend, init_params
+
+PONG = TreeConfig(X=2048, F=6, D=9)
+GOMOKU = TreeConfig(X=2048, F=36, D=5, beta=5.0, score_fn="puct",
+                    leaf_mode="unexpanded", expand_all=True)
+
+
+def run(n_steps=4, ps=(8, 32)):
+    rows = []
+    env_p = BanditTreeEnv(fanout=6, terminal_depth=12)
+    for p in ps:
+        base = None
+        for ex in ("reference", "faithful"):
+            stats, wall = run_supersteps(
+                PONG, env_p, RolloutBackend(env_p, max_steps=24, seed=1),
+                p, ex, n_steps)
+            thr = stats.sim_requests / wall
+            if ex == "reference":
+                base = thr
+            csv_line(f"fig5_throughput_pong_p{p}_{ex}", 1e6 / thr,
+                     f"req_per_s={thr:.0f};speedup={thr/base:.2f};"
+                     f"sim_frac={stats.t_sim/stats.t_total:.2f}")
+            rows.append(("pong", p, ex, thr))
+
+    genv = GomokuEnv()
+    nn = NNSimBackend(genv, init_params(jax.random.PRNGKey(0)))
+    for p in ps:
+        base = None
+        for ex in ("reference", "faithful"):
+            stats, wall = run_supersteps(GOMOKU, genv, nn, p, ex, n_steps,
+                                         alternating=True)
+            thr = stats.sim_requests / wall
+            if ex == "reference":
+                base = thr
+            csv_line(f"fig5_throughput_gomoku_p{p}_{ex}", 1e6 / thr,
+                     f"req_per_s={thr:.0f};speedup={thr/base:.2f};"
+                     f"sim_frac={stats.t_sim/stats.t_total:.2f}")
+            rows.append(("gomoku", p, ex, thr))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

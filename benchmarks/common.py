@@ -1,0 +1,36 @@
+"""Shared benchmark helpers."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import TreeConfig, TreeParallelMCTS
+
+
+class NullSim:
+    """Zero-cost simulation backend: isolates in-tree operation latency
+    (paper Fig. 4 measures Selection/Expansion/BackUp without Simulation)."""
+
+    def __init__(self, value=0.1):
+        self.value = value
+
+    def evaluate(self, states):
+        return np.full(len(states), self.value, np.float32), None
+
+
+def run_supersteps(cfg, env, sim, p, executor, n, seed=0, alternating=False):
+    m = TreeParallelMCTS(cfg, env, sim, p=p, executor=executor,
+                         alternating_signs=alternating, seed=seed)
+    m.superstep()          # warmup (jit compile)
+    m.reset(seed)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        m.superstep()
+    wall = time.perf_counter() - t0
+    return m.stats, wall
+
+
+def csv_line(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.2f},{derived}")

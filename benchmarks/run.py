@@ -1,0 +1,36 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  fig4   (bench_intree)     in-tree op latency vs p, CPU vs accelerated
+  fig5   (bench_throughput) system throughput + breakdown
+  table1 (bench_resources)  UCT accelerator memory vs VMEM budget
+  extras: fixed-point precision (paper §IV-C), selection diversity
+          (beyond-paper ablation), roofline summary (reads dry-run).
+
+Every line printed is ``name,us_per_call,derived`` CSV.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_diversity, bench_fixedpoint, bench_intree, bench_resources,
+        bench_roofline, bench_throughput,
+    )
+
+    t0 = time.time()
+    print("name,us_per_call,derived")
+    bench_resources.run()
+    bench_fixedpoint.run()
+    bench_intree.run()
+    bench_throughput.run()
+    bench_diversity.run()
+    bench_roofline.run()
+    print(f"# benchmarks completed in {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Dev check: reference executor vs batched jax executor, bit-exact trees."""
+import numpy as np
+
+from repro.core import TreeConfig, TreeParallelMCTS, RolloutBackend
+from repro.envs import BanditTreeEnv
+
+
+def run(executor: str, steps: int = 6, p: int = 8):
+    env = BanditTreeEnv(fanout=4, terminal_depth=8, varying_fanout=True)
+    cfg = TreeConfig(X=256, F=4, D=6, beta=1.0, vl_mode="wu")
+    m = TreeParallelMCTS(cfg, env, RolloutBackend(env, max_steps=16, seed=7),
+                         p=p, executor=executor, seed=3)
+    for _ in range(steps):
+        m.superstep()
+    return m.exec.snapshot(m.tree), m.stats
+
+
+ref_snap, _ = run("reference")
+jax_snap, _ = run("faithful")
+bad = []
+for k in ref_snap:
+    if k == "log_table":
+        continue
+    if not np.array_equal(ref_snap[k], jax_snap[k]):
+        d = np.argwhere(np.asarray(ref_snap[k]) != np.asarray(jax_snap[k]))
+        bad.append((k, d[:5], np.asarray(ref_snap[k]).ravel()[:8], np.asarray(jax_snap[k]).ravel()[:8]))
+print("MISMATCHES:", [b[0] for b in bad] or "none — bit-exact")
+for k, d, a, b in bad:
+    print(k, "first diffs at", d.tolist())
+print("tree size:", ref_snap["size"], jax_snap["size"])

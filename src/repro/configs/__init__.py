@@ -1,0 +1,77 @@
+"""Architecture registry + assigned input shapes.
+
+Each assigned arch has its own module exporting CONFIG (exact published
+numbers) and SMOKE (reduced same-family config for CPU tests).  The MCTS
+benchmark configs of the paper itself live in pong.py / gomoku_cfg.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ARCH_IDS = (
+    "paligemma_3b",
+    "recurrentgemma_9b",
+    "gemma3_12b",
+    "starcoder2_3b",
+    "llama3_2_1b",
+    "granite_3_8b",
+    "mamba2_2_7b",
+    "whisper_small",
+    "deepseek_v3_671b",
+    "mixtral_8x22b",
+)
+
+# canonical ids as given in the assignment (dashes/dots)
+CANON = {
+    "paligemma-3b": "paligemma_3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "gemma3-12b": "gemma3_12b",
+    "starcoder2-3b": "starcoder2_3b",
+    "llama3.2-1b": "llama3_2_1b",
+    "granite-3-8b": "granite_3_8b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "whisper-small": "whisper_small",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "mixtral-8x22b": "mixtral_8x22b",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def normalize(arch: str) -> str:
+    return CANON.get(arch, arch.replace("-", "_").replace(".", "_"))
+
+
+def get_config(arch: str, smoke: bool = False):
+    mod = importlib.import_module(f"repro.configs.{normalize(arch)}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+# mostly-local hybrids that run long_500k despite a minority of global
+# layers (DESIGN.md §4: gemma3 keeps 1-in-6 global layers with a sharded
+# full-length KV; the 5-in-6 local layers bound the rest)
+LONG_CONTEXT_ALLOW = {"gemma3-12b"}
+
+
+def cell_supported(cfg, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is (arch, shape) a runnable cell?  (DESIGN.md §Arch-applicability)."""
+    if (shape.name == "long_500k" and not cfg.supports_long_context()
+            and cfg.name not in LONG_CONTEXT_ALLOW):
+        return False, "pure full-attention stack: 500k decode out of contract"
+    return True, ""

@@ -1,0 +1,13 @@
+from repro.core.tree import TreeConfig, UCTree, init_tree, NULL
+from repro.core.mcts import (
+    TreeParallelMCTS, RolloutBackend, JaxExecutor, ReferenceExecutor,
+    make_executor,
+)
+from repro.core.state_table import StateTable
+from repro.core import fixedpoint, intree, ref_sequential, scoring
+
+__all__ = [
+    "TreeConfig", "UCTree", "init_tree", "NULL", "TreeParallelMCTS",
+    "RolloutBackend", "JaxExecutor", "ReferenceExecutor", "make_executor",
+    "StateTable", "fixedpoint", "intree", "ref_sequential", "scoring",
+]

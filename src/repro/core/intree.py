@@ -1,0 +1,395 @@
+"""Batched in-tree operations (the accelerator, paper §IV) in pure JAX.
+
+This module is the jit'd TPU-native replacement of the paper's FPGA
+in-tree-operation accelerator.  Three entry points mirror the accelerator's
+three functions:
+
+  select_batch   — Selection + virtual-loss apply for p workers
+                   (paper: worker distributor + subtree pipelines);
+  insert_batch   — Node Insertion (paper §IV-E);
+  backup_batch   — BackUp from memoized paths (paper §IV-E memoization
+                   buffer: Selection returns the traversed-edge refs so
+                   BackUp never re-walks the tree).
+
+Sequential-equivalence: the FPGA pipeline admits one worker per stage, so
+worker k observes the virtual loss of workers < k — exactly the sequential
+CPU program.  Here selection runs a `fori_loop` over workers (each a
+masked D-step descent); every arithmetic step goes through the shared
+fixed-point scoring spec, so outputs are bit-identical to
+ref_sequential.py (tested).  Insertion and BackUp are *fully vectorized*:
+their updates are integer scatter-adds, which commute exactly, so
+vectorized == sequential — this is the TPU's win over the FPGA design,
+which still serializes BackUp through pipeline stages.
+
+A `relaxed=True` selection variant applies all virtual loss once per
+superstep *after* all workers choose (single vectorized pass, no serial
+chain).  This is a beyond-paper optimization: it trades the intra-superstep
+worker-repulsion of WU-UCT for a ~p× shorter dependency chain; its effect
+on search diversity is measured in benchmarks/bench_diversity.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fx
+from repro.core import scoring
+from repro.core.tree import NULL, TreeConfig, UCTree
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SelectionResult:
+    path_nodes: Any     # [p, D] i32, NULL-padded
+    path_actions: Any   # [p, D] i32
+    depths: Any         # [p] i32
+    leaves: Any         # [p] i32
+    expand_action: Any  # [p] i32: action, NULL, or -2 (expand-all claim)
+    n_insert: Any       # [p] i32
+    insert_base: Any    # [p] i32: first node id this worker will insert
+
+
+def _scores_at(cfg: TreeConfig, tree: UCTree, node, edge_VL, node_O):
+    return scoring.edge_scores_fx(
+        cfg,
+        child=tree.child[node],
+        edge_N=tree.edge_N[node],
+        edge_W=tree.edge_W[node],
+        edge_VL=edge_VL[node],
+        edge_P=tree.edge_P[node],
+        node_N=tree.node_N[node][None],
+        node_O=node_O[node][None],
+        num_actions=tree.num_actions[node][None],
+        log_table=tree.log_table,
+        xp=jnp,
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def select_batch(cfg: TreeConfig, tree: UCTree, p: int, relaxed: bool = False):
+    """Selection for p workers.  Returns (tree', SelectionResult)."""
+    D = cfg.D
+    i32 = jnp.int32
+
+    def descend(j, carry):
+        edge_VL, node_O, pn, pa, depths, leaves = carry
+        if not relaxed:
+            node_O = node_O.at[tree.root].add(1)
+
+        def level(d, st):
+            node, depth, edge_VL, node_O, pn, pa = st
+            leaf = scoring.is_leaf(
+                cfg,
+                num_expanded=tree.num_expanded[node],
+                num_actions=tree.num_actions[node],
+                terminal=tree.terminal[node],
+                depth=depth,
+                xp=jnp,
+            )
+            active = (~leaf) & (d == depth)
+            s = _scores_at(cfg, tree, node, edge_VL, node_O)
+            a = scoring.argmax_first(s, xp=jnp)
+            inc = jnp.where(active, i32(1), i32(0))
+            if not relaxed:
+                edge_VL = edge_VL.at[node, a].add(inc)
+            nxt = tree.child[node, a]
+            pn = pn.at[j, d].set(jnp.where(active, node, pn[j, d]))
+            pa = pa.at[j, d].set(jnp.where(active, a, pa[j, d]))
+            node = jnp.where(active, nxt, node)
+            if not relaxed:
+                node_O = node_O.at[node].add(inc)
+            depth = depth + inc
+            return node, depth, edge_VL, node_O, pn, pa
+
+        node, depth, edge_VL, node_O, pn, pa = jax.lax.fori_loop(
+            0, D, level, (tree.root, i32(0), edge_VL, node_O, pn, pa)
+        )
+        depths = depths.at[j].set(depth)
+        leaves = leaves.at[j].set(node)
+        return edge_VL, node_O, pn, pa, depths, leaves
+
+    pn = jnp.full((p, D), NULL, dtype=i32)
+    pa = jnp.full((p, D), NULL, dtype=i32)
+    depths = jnp.zeros(p, dtype=i32)
+    leaves = jnp.zeros(p, dtype=i32)
+    edge_VL, node_O = tree.edge_VL, tree.node_O
+    edge_VL, node_O, pn, pa, depths, leaves = jax.lax.fori_loop(
+        0, p, descend, (edge_VL, node_O, pn, pa, depths, leaves)
+    )
+    if relaxed:
+        # Beyond-paper: one-shot VL/O application after all choices; scores
+        # above read only the pre-superstep statistics (no serial chain).
+        X = tree.X
+        idx_n = jnp.where(pn != NULL, pn, X)
+        edge_VL = edge_VL.at[idx_n, pa].add(1, mode="drop")
+        node_O = node_O.at[idx_n].add(1, mode="drop")
+        node_O = node_O.at[leaves].add(1)
+
+    tree = dataclasses.replace(tree, edge_VL=edge_VL, node_O=node_O)
+    return _assign_expansions(cfg, tree, pn, pa, depths, leaves, p)
+
+
+def _segment_rank(keys, p):
+    """r[j] = #{i < j : keys[i] == keys[j]} — stable within-group rank."""
+    i32 = jnp.int32
+    sidx = jnp.argsort(keys, stable=True)
+    sk = keys[sidx]
+    pos = jnp.arange(p, dtype=i32)
+    new_run = jnp.concatenate([jnp.array([True]), sk[1:] != sk[:-1]])
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(new_run, pos, i32(0)))
+    r_sorted = pos - run_start
+    return jnp.zeros(p, dtype=i32).at[sidx].set(r_sorted)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2))
+def select_batch_wavefront(cfg: TreeConfig, tree: UCTree, p: int):
+    """Beyond-paper selection: level-synchronous wavefront with rank-based
+    repulsion.
+
+    The faithful path serializes workers (chain length p*D) to reproduce
+    the FPGA pipeline's virtual-loss ordering.  Here all p workers advance
+    one level per step (chain length D).  Workers that meet at the same
+    node are spread across that node's top-scoring edges by their stable
+    within-group rank — a deterministic, vectorized surrogate for the
+    repulsion virtual loss provides across a superstep.  Virtual loss / O
+    counters are applied once at the end (cross-superstep semantics are
+    preserved exactly; intra-superstep repulsion is rank-based instead of
+    VL-based).  Diversity impact vs the faithful path is measured in
+    benchmarks (bench_diversity).
+    """
+    D, Fp, X = cfg.D, cfg.Fp, tree.X
+    i32 = jnp.int32
+    w = jnp.arange(p, dtype=i32)
+
+    def level(d, st):
+        nodes, depth, pn, pa = st
+        leaf = scoring.is_leaf(
+            cfg,
+            num_expanded=tree.num_expanded[nodes],
+            num_actions=tree.num_actions[nodes],
+            terminal=tree.terminal[nodes],
+            depth=depth,
+            xp=jnp,
+        )
+        active = (~leaf) & (depth == d)
+        s = scoring.edge_scores_fx(
+            cfg,
+            child=tree.child[nodes],
+            edge_N=tree.edge_N[nodes],
+            edge_W=tree.edge_W[nodes],
+            edge_VL=tree.edge_VL[nodes],
+            edge_P=tree.edge_P[nodes],
+            node_N=tree.node_N[nodes][:, None],
+            node_O=tree.node_O[nodes][:, None],
+            num_actions=tree.num_actions[nodes][:, None],
+            log_table=tree.log_table,
+            xp=jnp,
+        )                                                   # [p, Fp]
+        order = jnp.argsort(-s, axis=-1, stable=True)       # best-first, ties by lane
+        n_valid = jnp.maximum(jnp.sum(s > fx.FX_NEG_INF, axis=-1), 1).astype(i32)
+        rank = _segment_rank(jnp.where(active, nodes, X + w), p)
+        a = jnp.take_along_axis(
+            order, (rank % n_valid)[:, None], axis=-1)[:, 0].astype(i32)
+        pn = pn.at[w, d].set(jnp.where(active, nodes, pn[:, d]))
+        pa = pa.at[w, d].set(jnp.where(active, a, pa[:, d]))
+        nodes = jnp.where(active, tree.child[nodes, a], nodes)
+        depth = depth + jnp.where(active, i32(1), i32(0))
+        return nodes, depth, pn, pa
+
+    pn = jnp.full((p, D), NULL, dtype=i32)
+    pa = jnp.full((p, D), NULL, dtype=i32)
+    nodes, depths, pn, pa = jax.lax.fori_loop(
+        0, D, level, (jnp.broadcast_to(tree.root, (p,)), jnp.zeros(p, i32), pn, pa)
+    )
+    leaves = nodes
+    idx_n = jnp.where(pn != NULL, pn, X)
+    edge_VL = tree.edge_VL.at[idx_n, pa].add(1, mode="drop")
+    node_O = tree.node_O.at[idx_n].add(1, mode="drop").at[leaves].add(1)
+    tree = dataclasses.replace(tree, edge_VL=edge_VL, node_O=node_O)
+    return _assign_expansions(cfg, tree, pn, pa, depths, leaves, p)
+
+
+def _assign_expansions(cfg, tree, pn, pa, depths, leaves, p):
+    """BSP expansion-assignment post-pass (worker order), shared by all
+    selection variants."""
+    i32 = jnp.int32
+
+    def assign(j, carry):
+        pending, claimed, budget, ea, ni = carry
+        leaf = leaves[j]
+        can = (tree.terminal[leaf] == 0) & (depths[j] < cfg.D)
+        if cfg.expand_all:
+            k = tree.num_actions[leaf]
+            ok = (
+                can
+                & (claimed[leaf] == 0)
+                & (tree.num_expanded[leaf] == 0)
+                & (k > 0)
+                & (budget >= k)
+            )
+            ea = ea.at[j].set(jnp.where(ok, i32(-2), i32(NULL)))
+            ni = ni.at[j].set(jnp.where(ok, k, i32(0)))
+            claimed = claimed.at[leaf].max(jnp.where(ok, i32(1), i32(0)))
+            budget = budget - jnp.where(ok, k, i32(0))
+        else:
+            a = tree.num_expanded[leaf] + pending[leaf]
+            ok = can & (a < tree.num_actions[leaf]) & (budget >= 1)
+            ea = ea.at[j].set(jnp.where(ok, a, i32(NULL)))
+            ni = ni.at[j].set(jnp.where(ok, i32(1), i32(0)))
+            pending = pending.at[leaf].add(jnp.where(ok, i32(1), i32(0)))
+            budget = budget - jnp.where(ok, i32(1), i32(0))
+        return pending, claimed, budget, ea, ni
+
+    pending = jnp.zeros(tree.X, dtype=i32)
+    claimed = jnp.zeros(tree.X, dtype=i32)
+    ea = jnp.full(p, NULL, dtype=i32)
+    ni = jnp.zeros(p, dtype=i32)
+    budget0 = jnp.asarray(cfg.X, i32) - tree.size
+    _, _, _, ea, ni = jax.lax.fori_loop(
+        0, p, assign, (pending, claimed, budget0, ea, ni)
+    )
+    insert_base = tree.size + jnp.cumsum(ni) - ni
+    return tree, SelectionResult(pn, pa, depths, leaves, ea, ni, insert_base)
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def insert_batch(cfg: TreeConfig, tree: UCTree, sel: SelectionResult):
+    """Node Insertion for all workers at once (vectorized scatter).
+
+    Returns (tree', new_nodes[p, Fp] NULL-padded).  Distinctness of target
+    edges is guaranteed by the assignment post-pass (the paper's
+    'all workers expand different nodes' invariant), so scatters never
+    collide except the commutative num_expanded counts.
+    """
+    p = sel.leaves.shape[0]
+    X, Fp = tree.X, tree.Fp
+    i32 = jnp.int32
+    lane = jnp.arange(Fp, dtype=i32)[None, :]                     # [1, Fp]
+    single = (sel.expand_action[:, None] >= 0)                    # [p, 1]
+    allmode = (sel.expand_action[:, None] == -2)                  # [p, 1]
+    act = jnp.where(single, sel.expand_action[:, None], lane)     # [p, Fp]
+    valid = (single & (lane == 0)) | (allmode & (lane < sel.n_insert[:, None]))
+    nid = sel.insert_base[:, None] + jnp.where(single, 0, lane)   # [p, Fp]
+    leaf = jnp.broadcast_to(sel.leaves[:, None], (p, Fp))
+
+    li = jnp.where(valid, leaf, X)
+    ai = jnp.where(valid, act, Fp)
+    ci = jnp.where(valid, nid, X)
+    child = tree.child.at[li, ai].set(jnp.where(valid, nid, NULL), mode="drop")
+    node_depth = tree.node_depth.at[ci].set(
+        tree.node_depth[sel.leaves][:, None] + 1, mode="drop")
+    num_actions = tree.num_actions.at[ci].set(i32(cfg.F), mode="drop")
+    num_expanded = tree.num_expanded.at[jnp.where(valid, leaf, X)].add(
+        jnp.where(valid, 1, 0), mode="drop")
+    size = tree.size + jnp.sum(sel.n_insert)
+    new_nodes = jnp.where(valid, nid, NULL)
+    tree = dataclasses.replace(
+        tree, child=child, node_depth=node_depth,
+        num_actions=num_actions, num_expanded=num_expanded, size=size)
+    return tree, new_nodes
+
+
+@jax.jit
+def finalize_expansion_batch(
+    tree: UCTree,
+    nodes,          # [k] i32 (NULL-padded ok)
+    num_actions,    # [k] i32
+    terminal,       # [k] i32
+    prior_parent=None,   # [k2] i32 parent ids (NULL-padded ok)
+    priors_fx=None,      # [k2, Fp] i32
+):
+    X = tree.X
+    idx = jnp.where(nodes == NULL, X, nodes)
+    na = tree.num_actions.at[idx].set(num_actions, mode="drop")
+    tm = tree.terminal.at[idx].set(terminal, mode="drop")
+    ep = tree.edge_P
+    if priors_fx is not None:
+        pidx = jnp.where(prior_parent == NULL, X, prior_parent)
+        ep = ep.at[pidx].set(priors_fx, mode="drop")
+    return dataclasses.replace(tree, num_actions=na, terminal=tm, edge_P=ep)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6))
+def backup_batch(
+    cfg: TreeConfig,
+    tree: UCTree,
+    sel: SelectionResult,
+    sim_nodes,      # [p] i32
+    values_fx,      # [p] i32 Qm.16
+    alternating_signs: bool = False,
+    with_mask: bool = False,
+    dropped=None,   # [p] bool — straggler/failed workers (recover-only)
+):
+    """BackUp for all p workers — one vectorized scatter-add pass.
+
+    Exact integer arithmetic makes the scatter order-free, so this equals
+    the sequential program bit-for-bit while touching each path edge once.
+
+    Fault tolerance (distributed.fault.BSPFaultPolicy): a `dropped` worker
+    gets a VL-recovery-only backup — its virtual loss and in-flight
+    counters are removed exactly as if it had never been dispatched, but
+    it contributes no visit counts or reward.  The UCT quiescence
+    invariants (VL == 0, O == 0) therefore survive worker loss.
+    """
+    p, D = sel.path_nodes.shape
+    X = tree.X
+    i32 = jnp.int32
+    on_path = sel.path_nodes != NULL                              # [p, D]
+    expanded = (sel.expand_action >= 0) & jnp.asarray(not cfg.expand_all)
+    sim_depth = sel.depths + jnp.where(expanded, 1, 0)            # [p]
+
+    if with_mask:
+        alive = ~jnp.asarray(dropped)
+    else:
+        alive = jnp.ones((p,), bool)
+
+    d_idx = jnp.arange(D, dtype=i32)[None, :]
+    if alternating_signs:
+        sign = jnp.where((sim_depth[:, None] - d_idx) % 2 == 1, i32(-1), i32(1))
+    else:
+        sign = jnp.ones((p, D), dtype=i32)
+
+    rinc = jnp.where(on_path, i32(1), i32(0))                 # recovery
+    ninc = rinc * jnp.where(alive, i32(1), i32(0))[:, None]   # accumulation
+    winc = ninc * sign * values_fx[:, None]
+    li = jnp.where(on_path, sel.path_nodes, X)
+    ai = jnp.where(on_path, sel.path_actions, tree.Fp)
+
+    edge_N = tree.edge_N.at[li, ai].add(ninc, mode="drop")
+    edge_W = tree.edge_W.at[li, ai].add(winc, mode="drop")
+    edge_VL = tree.edge_VL.at[li, ai].add(-rinc, mode="drop")
+    node_N = tree.node_N.at[li].add(ninc, mode="drop")
+    node_O = tree.node_O.at[li].add(-rinc, mode="drop")
+    node_N = node_N.at[sel.leaves].add(jnp.where(alive, 1, 0))
+    node_O = node_O.at[sel.leaves].add(-1)
+
+    # Expansion edges (single-expand mode): seed the sim node's in-edge.
+    live_exp = expanded & alive
+    e_leaf = jnp.where(live_exp, sel.leaves, X)
+    e_act = jnp.where(live_exp, sel.expand_action, tree.Fp)
+    e_sign = jnp.where(
+        jnp.asarray(alternating_signs) & ((sim_depth - sel.depths) % 2 == 1),
+        i32(-1), i32(1))
+    e_inc = jnp.where(live_exp, i32(1), i32(0))
+    edge_N = edge_N.at[e_leaf, e_act].add(e_inc, mode="drop")
+    edge_W = edge_W.at[e_leaf, e_act].add(e_inc * e_sign * values_fx, mode="drop")
+    node_N = node_N.at[jnp.where(live_exp, sim_nodes, X)].add(1, mode="drop")
+
+    return dataclasses.replace(
+        tree, edge_N=edge_N, edge_W=edge_W, edge_VL=edge_VL,
+        node_N=node_N, node_O=node_O)
+
+
+@jax.jit
+def best_root_action(tree: UCTree):
+    """Robust-child action choice at the MCTS step boundary."""
+    Fp = tree.Fp
+    lane = jnp.arange(Fp, dtype=jnp.int32)
+    n = tree.edge_N[tree.root]
+    ok = (lane < tree.num_actions[tree.root]) & (tree.child[tree.root] != NULL)
+    return jnp.argmax(jnp.where(ok, n, -1)).astype(jnp.int32)

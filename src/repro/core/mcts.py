@@ -1,0 +1,401 @@
+"""Tree-Parallel MCTS BSP driver (paper Alg. 2 / Fig. 2).
+
+One superstep =
+  1. Selection + Node Insertion on the accelerator          (device)
+  2. Receive buffer: node indices s, s' -> host              (O(p) transfer)
+  3. ST reads, 1-step simulations, ST writes                 (host, sync-free)
+  4. Simulation phase (software rollout or NN/LM inference)  (host/device)
+  5. barrier; Send buffer: rewards -> accelerator            (O(p) transfer)
+  6. BackUp on the accelerator                               (device)
+
+The driver is executor-agnostic: the in-tree operations run on the
+sequential numpy reference (the paper's CPU-only baseline), the batched
+jit ops, the Pallas kernels, or the beyond-paper wavefront variant —
+selected by name.  All executors are bit-compatible with the reference
+except "wavefront"/"relaxed" (documented intra-superstep semantics change).
+
+Phase wall-times are recorded per superstep so the benchmark harness can
+reproduce the paper's Fig. 4 (in-tree latency) and Fig. 5 (system
+throughput + breakdown) directly from driver telemetry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Protocol
+
+import jax
+import numpy as np
+
+from repro.core import fixedpoint as fx
+from repro.core import intree, ref_sequential as ref
+from repro.core.state_table import StateTable
+from repro.core.tree import NULL, TreeConfig, UCTree, init_tree
+
+
+# --------------------------------------------------------------------------
+# Environment / simulation-backend interfaces
+# --------------------------------------------------------------------------
+
+class Environment(Protocol):
+    """Host-side environment.  States are fixed-shape numpy arrays so they
+    can live in the ST.  Action index `a` at a node means "the a-th legal
+    action of that node's state" (stable per state)."""
+
+    state_shape: tuple
+    state_dtype: Any
+    max_actions: int
+
+    def initial_state(self, seed: int) -> np.ndarray: ...
+    def num_actions(self, state: np.ndarray) -> int: ...
+    def step(self, state: np.ndarray, a: int) -> tuple[np.ndarray, float, bool]: ...
+
+
+class SimulationBackend(Protocol):
+    """Maps a batch of states to values (and optionally priors).  This is
+    the paper's Simulation phase: software rollout (Pong) or DNN inference
+    (Gomoku).  The LM zoo plugs in here via LMSimBackend."""
+
+    def evaluate(self, states: np.ndarray) -> tuple[np.ndarray, np.ndarray | None]: ...
+
+
+class RolloutBackend:
+    """Software simulation until termination (paper's OpenAI-gym path)."""
+
+    def __init__(self, env, max_steps: int = 200, seed: int = 0, discount: float = 1.0):
+        self.env, self.max_steps, self.discount = env, max_steps, discount
+        self.rng = np.random.RandomState(seed)
+
+    def evaluate(self, states):
+        vals = np.zeros(len(states), dtype=np.float32)
+        for i, s in enumerate(states):
+            v, g, cur = 0.0, 1.0, s
+            for _ in range(self.max_steps):
+                k = self.env.num_actions(cur)
+                if k == 0:
+                    break
+                cur, r, term = self.env.step(cur, int(self.rng.randint(k)))
+                v += g * r
+                g *= self.discount
+                if term:
+                    break
+            vals[i] = v
+        return vals, None
+
+
+# --------------------------------------------------------------------------
+# In-tree executors
+# --------------------------------------------------------------------------
+
+class JaxExecutor:
+    """Batched jit / Pallas / wavefront in-tree operations on device."""
+
+    def __init__(self, cfg: TreeConfig, variant: str = "faithful"):
+        assert variant in ("faithful", "relaxed", "wavefront", "pallas")
+        self.cfg, self.variant = cfg, variant
+        if variant == "pallas":
+            from repro.kernels import ops as kops  # lazy: keeps core import-light
+            self._kops = kops
+
+    def init(self, root_num_actions: int) -> UCTree:
+        return init_tree(self.cfg, root_num_actions)
+
+    def selection(self, tree: UCTree, p: int):
+        if self.variant == "wavefront":
+            return intree.select_batch_wavefront(self.cfg, tree, p)
+        if self.variant == "pallas":
+            return self._kops.select_batch(self.cfg, tree, p)
+        return intree.select_batch(self.cfg, tree, p, self.variant == "relaxed")
+
+    def insert(self, tree, sel):
+        return intree.insert_batch(self.cfg, tree, sel)
+
+    def finalize(self, tree, nodes, num_actions, terminal, prior_parent=None, priors_fx=None):
+        return intree.finalize_expansion_batch(
+            tree, nodes, num_actions, terminal, prior_parent, priors_fx)
+
+    def backup(self, tree, sel, sim_nodes, values_fx, alternating,
+               dropped=None):
+        if dropped is not None:
+            # masked (straggler) backups run on the batched jit path; the
+            # Pallas kernel covers the hot fault-free superstep
+            return intree.backup_batch(
+                self.cfg, tree, sel, sim_nodes, values_fx, alternating,
+                True, np.asarray(dropped))
+        if self.variant == "pallas":
+            return self._kops.backup_batch(
+                self.cfg, tree, sel, sim_nodes, values_fx, alternating)
+        return intree.backup_batch(self.cfg, tree, sel, sim_nodes, values_fx, alternating)
+
+    def best_action(self, tree) -> int:
+        return int(intree.best_root_action(tree))
+
+    def snapshot(self, tree) -> dict:
+        return {k: np.asarray(v) for k, v in dataclasses.asdict(tree).items()}
+
+
+class ReferenceExecutor:
+    """The paper's CPU-only master process (sequential numpy)."""
+
+    def __init__(self, cfg: TreeConfig):
+        self.cfg = cfg
+
+    def init(self, root_num_actions: int):
+        return ref.MutableTree.from_tree(init_tree(self.cfg, root_num_actions, xp=np))
+
+    def selection(self, tree, p: int):
+        sel = ref.selection_phase(self.cfg, tree, p)
+        ni = sel["n_insert"]
+        sel["insert_base"] = tree.size + np.cumsum(ni) - ni
+        return tree, sel
+
+    def insert(self, tree, sel):
+        return tree, ref.insert_phase(self.cfg, tree, sel)
+
+    def finalize(self, tree, nodes, num_actions, terminal, prior_parent=None, priors_fx=None):
+        ref.finalize_expansion(tree, nodes, num_actions, terminal, prior_parent, priors_fx)
+        return tree
+
+    def backup(self, tree, sel, sim_nodes, values_fx, alternating,
+               dropped=None):
+        ref.backup_phase(self.cfg, tree, sel, sim_nodes, values_fx,
+                         alternating, dropped)
+        return tree
+
+    def best_action(self, tree) -> int:
+        return ref.best_root_action(self.cfg, tree)
+
+    def snapshot(self, tree) -> dict:
+        return {k: np.asarray(v) for k, v in dataclasses.asdict(tree.to_tree()).items()}
+
+
+def make_executor(cfg: TreeConfig, name: str):
+    if name == "reference":
+        return ReferenceExecutor(cfg)
+    return JaxExecutor(cfg, name)
+
+
+def _sel_to_host(sel) -> dict:
+    """One Receive-buffer transfer: device selection result -> host numpy."""
+    if isinstance(sel, dict):
+        return sel
+    d = {
+        "path_nodes": sel.path_nodes, "path_actions": sel.path_actions,
+        "depths": sel.depths, "leaves": sel.leaves,
+        "expand_action": sel.expand_action, "n_insert": sel.n_insert,
+        "insert_base": sel.insert_base,
+    }
+    return {k: np.asarray(v) for k, v in jax.device_get(d).items()}
+
+
+def _sel_from_host(sel: dict):
+    return intree.SelectionResult(
+        **{k: sel[k] for k in (
+            "path_nodes", "path_actions", "depths", "leaves",
+            "expand_action", "n_insert", "insert_base")})
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepStats:
+    supersteps: int = 0
+    sim_requests: int = 0
+    t_select: float = 0.0
+    t_insert: float = 0.0
+    t_backup: float = 0.0
+    t_transfer: float = 0.0
+    t_st: float = 0.0
+    t_sim: float = 0.0
+
+    @property
+    def t_intree(self) -> float:
+        # Paper Fig. 4 metric: Selection + Expansion(tree half) + BackUp
+        # + host<->accel transfer + ST operations.
+        return self.t_select + self.t_insert + self.t_backup + self.t_transfer + self.t_st
+
+    @property
+    def t_total(self) -> float:
+        return self.t_intree + self.t_sim
+
+
+class TreeParallelMCTS:
+    """The full system of Fig. 2 on one host."""
+
+    def __init__(
+        self,
+        cfg: TreeConfig,
+        env: Environment,
+        sim: SimulationBackend,
+        p: int,
+        executor: str = "faithful",
+        alternating_signs: bool = False,
+        seed: int = 0,
+    ):
+        self.cfg, self.env, self.sim, self.p = cfg, env, sim, p
+        self.alternating_signs = alternating_signs
+        self.exec = make_executor(cfg, executor)
+        self.st = StateTable(cfg.X, env.state_shape, env.state_dtype)
+        self.reset(seed)
+
+    def reset(self, seed: int = 0):
+        s0 = self.env.initial_state(seed)
+        self.tree = self.exec.init(self.env.num_actions(s0))
+        self.st.flush(s0)
+        self.root_state = s0
+        self.stats = StepStats()
+
+    # -- one BSP superstep (Alg. 2) ------------------------------------
+    def superstep(self, fault_injector=None):
+        """One BSP superstep.  `fault_injector(p) -> done[p] bool` models
+        simulation workers that miss the barrier (stragglers/failures);
+        with a BSPFaultPolicy-style mask, missing workers get a
+        VL-recovery-only backup (see intree.backup_batch) so the tree
+        invariants survive worker loss."""
+        cfg, p, st = self.cfg, self.p, self.st
+        t0 = time.perf_counter()
+        self.tree, sel_dev = self.exec.selection(self.tree, p)
+        _block(self.tree)
+        t1 = time.perf_counter()
+        sel = _sel_to_host(sel_dev)
+        t2 = time.perf_counter()
+
+        # Node Insertion (tree half, accelerator)
+        ins_sel = sel_dev if not isinstance(sel_dev, dict) else sel
+        self.tree, new_nodes = self.exec.insert(self.tree, ins_sel)
+        _block(self.tree)
+        t3 = time.perf_counter()
+        new_nodes = np.asarray(jax.device_get(new_nodes))
+
+        # --- host: ST reads + 1-step sims + ST writes (sync-free) ---
+        t4 = time.perf_counter()
+        leaves = sel["leaves"]
+        leaf_states = st.read(leaves)
+        sim_nodes = leaves.copy()
+        sim_states = leaf_states.copy()
+        fin_nodes, fin_na, fin_term = [], [], []
+        prior_parents, prior_workers = [], []
+        for j in range(p):
+            ea = int(sel["expand_action"][j])
+            if ea == NULL:
+                continue
+            if ea == -2:  # expand-all (Gomoku benchmark mode)
+                k = int(sel["n_insert"][j])
+                states, nas, terms = [], [], []
+                for a in range(k):
+                    s2, _, term = self.env.step(leaf_states[j], a)
+                    states.append(s2)
+                    nas.append(0 if term else self.env.num_actions(s2))
+                    terms.append(int(term))
+                ids = new_nodes[j, :k]
+                st.write(ids, np.stack(states))
+                fin_nodes += list(ids)
+                fin_na += nas
+                fin_term += terms
+                prior_parents.append(int(leaves[j]))
+                prior_workers.append(j)
+            else:
+                s2, _, term = self.env.step(leaf_states[j], ea)
+                nid = int(new_nodes[j, 0])
+                st.write(np.array([nid]), s2[None])
+                fin_nodes.append(nid)
+                fin_na.append(0 if term else self.env.num_actions(s2))
+                fin_term.append(int(term))
+                sim_nodes[j] = nid
+                sim_states[j] = s2
+        t5 = time.perf_counter()
+
+        # --- Simulation phase ---
+        values, priors = self.sim.evaluate(sim_states)
+        t6 = time.perf_counter()
+
+        # --- barrier; Send buffer -> accelerator; finalize + BackUp ---
+        if fin_nodes:
+            pf = None
+            if priors is not None and prior_workers:
+                # priors were produced for the leaf states that expanded-all
+                # (sim node == leaf for those workers); pad to Fp lanes.
+                pr = np.asarray(priors)[prior_workers]
+                padded = np.zeros((len(prior_workers), self.cfg.Fp), np.float32)
+                padded[:, : pr.shape[1]] = pr
+                pf = np.asarray(fx.encode(padded), np.int32)
+            self.tree = self.exec.finalize(
+                self.tree,
+                np.asarray(fin_nodes, np.int32),
+                np.asarray(fin_na, np.int32),
+                np.asarray(fin_term, np.int32),
+                np.asarray(prior_parents, np.int32) if prior_parents else None,
+                pf,
+            )
+        values_fx = np.asarray(fx.encode(values), np.int32)
+        dropped = None
+        if fault_injector is not None:
+            done = np.asarray(fault_injector(p), bool)
+            dropped = ~done
+            if not dropped.any():
+                dropped = None
+        t7 = time.perf_counter()
+        bsel = sel_dev if not isinstance(sel_dev, dict) else sel
+        self.tree = self.exec.backup(
+            self.tree, bsel, sim_nodes.astype(np.int32), values_fx,
+            self.alternating_signs, dropped)
+        _block(self.tree)
+        t8 = time.perf_counter()
+
+        s = self.stats
+        s.supersteps += 1
+        s.sim_requests += p
+        s.t_select += t1 - t0
+        s.t_transfer += (t2 - t1) + (t7 - t6)
+        s.t_insert += t3 - t2
+        s.t_st += t5 - t4
+        s.t_sim += t6 - t5
+        s.t_backup += t8 - t7
+        return sel
+
+    # -- one MCTS step (paper Fig. 1): build tree to X nodes, act, flush
+    def run_step(self, max_supersteps: int = 10_000, reuse_subtree: bool = False):
+        """reuse_subtree=True replaces the paper's full Tree Flush with a
+        statistics-preserving re-root (core.reroot, beyond-paper): every
+        simulation spent under the chosen action carries into the next
+        step.  Requires a jax executor (host reroot feeds jnp arrays)."""
+        size0 = int(np.asarray(self._size()))
+        steps = 0
+        while int(np.asarray(self._size())) < self.cfg.X and steps < max_supersteps:
+            self.superstep()
+            steps += 1
+            new_size = int(np.asarray(self._size()))
+            if new_size == size0:  # saturated (all leaves terminal/at depth cap)
+                break
+            size0 = new_size
+        a = self.exec.best_action(self.tree)
+        new_root_state, reward, term = self.env.step(self.root_state, a)
+        snap = self.exec.snapshot(self.tree) if reuse_subtree else None
+        self.root_state = new_root_state
+        if reuse_subtree and not term and not isinstance(
+                self.exec, ReferenceExecutor):
+            from repro.core import reroot
+            new_root = int(snap["child"][int(snap["root"]), a])
+            if new_root != NULL:
+                import jax.numpy as jnp
+                self.tree, old2new = reroot.reroot_tree(
+                    self.cfg, snap, new_root, jnp)
+                self.st.compact(old2new)
+                return a, reward, term
+        # paper-faithful full flush
+        k = 0 if term else self.env.num_actions(new_root_state)
+        self.tree = self.exec.init(max(k, 1))
+        self.st.flush(new_root_state)
+        return a, reward, term
+
+    def _size(self):
+        return self.tree.size
+
+
+def _block(tree):
+    x = tree.size if not isinstance(tree, ref.MutableTree) else None
+    if x is not None:
+        jax.block_until_ready(x)

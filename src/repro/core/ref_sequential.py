@@ -1,0 +1,282 @@
+"""Sequential CPU reference for p-worker Tree-Parallel MCTS (paper Alg. 1/2).
+
+This is the baseline the paper accelerates: a single master process doing
+in-tree operations for p workers in worker order, with virtual loss applied
+inside the critical region.  It serves two roles here:
+
+  1. the correctness ORACLE — the paper proves its accelerator produces
+     "the exact same outputs as that of a CPU-only system"; our batched
+     jit ops and Pallas kernels are tested bit-exactly against this module;
+  2. the CPU-ONLY BASELINE of the benchmarks (Fig. 4 / Fig. 5 analogues).
+
+Everything here is plain numpy, deliberately unvectorized across workers
+(that is the point of the baseline).  Scoring goes through the shared
+backend-generic routine in scoring.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import fixedpoint as fx
+from repro.core import scoring
+from repro.core.tree import NULL, TreeConfig, UCTree
+
+
+@dataclasses.dataclass
+class MutableTree:
+    """Mutable numpy mirror of UCTree for the in-place sequential program."""
+
+    child: np.ndarray
+    edge_N: np.ndarray
+    edge_W: np.ndarray
+    edge_VL: np.ndarray
+    edge_P: np.ndarray
+    node_N: np.ndarray
+    node_O: np.ndarray
+    num_expanded: np.ndarray
+    num_actions: np.ndarray
+    node_depth: np.ndarray
+    terminal: np.ndarray
+    size: int
+    root: int
+    log_table: np.ndarray
+
+    @classmethod
+    def from_tree(cls, t: UCTree) -> "MutableTree":
+        return cls(
+            child=np.array(t.child, dtype=np.int32),
+            edge_N=np.array(t.edge_N, dtype=np.int32),
+            edge_W=np.array(t.edge_W, dtype=np.int32),
+            edge_VL=np.array(t.edge_VL, dtype=np.int32),
+            edge_P=np.array(t.edge_P, dtype=np.int32),
+            node_N=np.array(t.node_N, dtype=np.int32),
+            node_O=np.array(t.node_O, dtype=np.int32),
+            num_expanded=np.array(t.num_expanded, dtype=np.int32),
+            num_actions=np.array(t.num_actions, dtype=np.int32),
+            node_depth=np.array(t.node_depth, dtype=np.int32),
+            terminal=np.array(t.terminal, dtype=np.int32),
+            size=int(t.size),
+            root=int(t.root),
+            log_table=np.array(t.log_table, dtype=np.float32),
+        )
+
+    def to_tree(self) -> UCTree:
+        return UCTree(
+            child=self.child, edge_N=self.edge_N, edge_W=self.edge_W,
+            edge_VL=self.edge_VL, edge_P=self.edge_P, node_N=self.node_N,
+            node_O=self.node_O, num_expanded=self.num_expanded,
+            num_actions=self.num_actions, node_depth=self.node_depth,
+            terminal=self.terminal, size=np.int32(self.size),
+            root=np.int32(self.root), log_table=self.log_table,
+        )
+
+
+def _node_scores(cfg: TreeConfig, t: MutableTree, node: int) -> np.ndarray:
+    return scoring.edge_scores_fx(
+        cfg,
+        child=t.child[node],
+        edge_N=t.edge_N[node],
+        edge_W=t.edge_W[node],
+        edge_VL=t.edge_VL[node],
+        edge_P=t.edge_P[node],
+        node_N=t.node_N[node : node + 1],
+        node_O=t.node_O[node : node + 1],
+        num_actions=t.num_actions[node : node + 1],
+        log_table=t.log_table,
+        xp=np,
+    )
+
+
+def _is_leaf(cfg: TreeConfig, t: MutableTree, node: int, depth: int) -> bool:
+    return bool(
+        scoring.is_leaf(
+            cfg,
+            num_expanded=t.num_expanded[node],
+            num_actions=t.num_actions[node],
+            terminal=t.terminal[node],
+            depth=depth,
+            xp=np,
+        )
+    )
+
+
+def select_one(cfg: TreeConfig, t: MutableTree):
+    """Alg. 1 SELECTION for one worker: descend, applying virtual loss.
+
+    Returns (path_nodes[D], path_actions[D], depth, leaf).  Arrays are
+    NULL-padded beyond `depth`.
+    """
+    path_nodes = np.full(cfg.D, NULL, dtype=np.int32)
+    path_actions = np.full(cfg.D, NULL, dtype=np.int32)
+    node = t.root
+    t.node_O[node] += 1
+    depth = 0
+    while not _is_leaf(cfg, t, node, depth):
+        scores = _node_scores(cfg, t, node)
+        a = int(scoring.argmax_first(scores, xp=np))
+        t.edge_VL[node, a] += 1                      # Alg. 1 line 5 (RAW region)
+        path_nodes[depth] = node
+        path_actions[depth] = a
+        node = int(t.child[node, a])
+        t.node_O[node] += 1
+        depth += 1
+    return path_nodes, path_actions, depth, node
+
+
+def selection_phase(cfg: TreeConfig, t: MutableTree, p: int):
+    """All p workers' Selections, strictly in worker order (the sequential
+    semantics the paper's pipeline reproduces), followed by the BSP
+    expansion-assignment post-pass.
+
+    Returns dict with per-worker paths, leaves, depths and expansion plan:
+      expand_action[j] : action index to expand, NULL if none,
+                         -2 means "expand all legal actions" (expand_all).
+      n_insert[j]      : how many nodes worker j will insert.
+    """
+    path_nodes = np.full((p, cfg.D), NULL, dtype=np.int32)
+    path_actions = np.full((p, cfg.D), NULL, dtype=np.int32)
+    depths = np.zeros(p, dtype=np.int32)
+    leaves = np.zeros(p, dtype=np.int32)
+    for j in range(p):
+        pn, pa, d, leaf = select_one(cfg, t)
+        path_nodes[j], path_actions[j] = pn, pa
+        depths[j], leaves[j] = d, leaf
+
+    expand_action = np.full(p, NULL, dtype=np.int32)
+    n_insert = np.zeros(p, dtype=np.int32)
+    budget = cfg.X - t.size
+    pending: dict[int, int] = {}
+    claimed: set[int] = set()
+    for j in range(p):
+        leaf = int(leaves[j])
+        if t.terminal[leaf] or depths[j] >= cfg.D:
+            continue
+        if cfg.expand_all:
+            if leaf in claimed or t.num_expanded[leaf] > 0:
+                continue
+            k = int(t.num_actions[leaf])
+            if k == 0 or budget < k:
+                continue
+            claimed.add(leaf)
+            expand_action[j] = -2
+            n_insert[j] = k
+            budget -= k
+        else:
+            a = int(t.num_expanded[leaf]) + pending.get(leaf, 0)
+            if a >= int(t.num_actions[leaf]) or budget < 1:
+                continue
+            pending[leaf] = pending.get(leaf, 0) + 1
+            expand_action[j] = a
+            n_insert[j] = 1
+            budget -= 1
+    return dict(
+        path_nodes=path_nodes, path_actions=path_actions, depths=depths,
+        leaves=leaves, expand_action=expand_action, n_insert=n_insert,
+    )
+
+
+def insert_phase(cfg: TreeConfig, t: MutableTree, sel: dict) -> np.ndarray:
+    """Alg. 1 EXPANSION tree half: allocate node ids, link edges.
+
+    Returns new_nodes[p, Fp] (NULL-padded): worker j's inserted node ids
+    (one for single-expand; num_actions[leaf] for expand_all).
+    """
+    p = sel["leaves"].shape[0]
+    new_nodes = np.full((p, cfg.Fp), NULL, dtype=np.int32)
+    for j in range(p):
+        leaf = int(sel["leaves"][j])
+        ea = int(sel["expand_action"][j])
+        if ea == NULL:
+            continue
+        actions = range(int(t.num_actions[leaf])) if ea == -2 else [ea]
+        for i, a in enumerate(actions):
+            nid = t.size
+            t.size += 1
+            t.child[leaf, a] = nid
+            t.node_depth[nid] = t.node_depth[leaf] + 1
+            t.num_actions[nid] = cfg.F        # refined by finalize_expansion
+            t.num_expanded[leaf] += 1
+            new_nodes[j, i] = nid
+    return new_nodes
+
+
+def finalize_expansion(
+    t: MutableTree,
+    nodes: np.ndarray,        # [k] node ids
+    num_actions: np.ndarray,  # [k]
+    terminal: np.ndarray,     # [k]
+    prior_parent: np.ndarray | None = None,  # [k] parent ids for priors
+    priors_fx: np.ndarray | None = None,     # [k, Fp] Qm.16
+):
+    """Host metadata write-back after the 1-step simulations."""
+    for i, n in enumerate(np.asarray(nodes, dtype=np.int64)):
+        if n == NULL:
+            continue
+        t.num_actions[n] = num_actions[i]
+        t.terminal[n] = terminal[i]
+    if priors_fx is not None:
+        for i, pa in enumerate(np.asarray(prior_parent, dtype=np.int64)):
+            if pa == NULL:
+                continue
+            t.edge_P[pa] = priors_fx[i]
+
+
+def backup_phase(
+    cfg: TreeConfig,
+    t: MutableTree,
+    sel: dict,
+    sim_nodes: np.ndarray,   # [p] node the simulation ran from
+    values_fx: np.ndarray,   # [p] Qm.16 simulation rewards
+    alternating_signs: bool = False,
+    dropped: np.ndarray | None = None,   # [p] bool: recover-only workers
+):
+    """Alg. 1 BACKUP for all p workers in worker order.
+
+    Updates every traversed edge (recovering VL) plus the expansion edge
+    when one exists (WU-UCT convention: the simulated node's reward seeds
+    its in-edge), all in exact Qm.16 integer arithmetic.  `dropped`
+    workers (straggler policy) only recover their virtual loss.
+    """
+    p = sim_nodes.shape[0]
+    for j in range(p):
+        alive = dropped is None or not dropped[j]
+        v = np.int32(values_fx[j])
+        depth = int(sel["depths"][j])
+        leaf = int(sel["leaves"][j])
+        ea = int(sel["expand_action"][j])
+        # sim_depth: depth of the node whose value v is measured from.
+        sim_depth = depth + (1 if (ea != NULL and ea != -2 and not cfg.expand_all) else 0)
+        for d in range(depth):
+            node = int(sel["path_nodes"][j, d])
+            a = int(sel["path_actions"][j, d])
+            sign = -1 if (alternating_signs and (sim_depth - d) % 2 == 1) else 1
+            if alive:
+                t.edge_N[node, a] += 1
+                t.edge_W[node, a] += np.int32(sign) * v
+                t.node_N[node] += 1
+            t.edge_VL[node, a] -= 1
+            t.node_O[node] -= 1
+        if alive:
+            t.node_N[leaf] += 1
+        t.node_O[leaf] -= 1
+        if alive and ea != NULL and ea != -2 and not cfg.expand_all:
+            nid = int(sim_nodes[j])
+            # Expansion edge sits at depth `depth`; same sign rule as above
+            # (alternating games: v is from the sim node's player, the edge
+            # belongs to the leaf's player => flipped).
+            sign = -1 if (alternating_signs and (sim_depth - depth) % 2 == 1) else 1
+            t.edge_N[leaf, ea] += 1
+            t.edge_W[leaf, ea] += np.int32(sign) * v
+            t.node_N[nid] += 1
+
+
+def best_root_action(cfg: TreeConfig, t: MutableTree) -> int:
+    """Agent action at an MCTS step boundary: robust child (max edge_N),
+    ties broken toward max uct score then lowest index."""
+    n = t.edge_N[t.root].astype(np.int64)
+    lane_ok = (np.arange(cfg.Fp) < t.num_actions[t.root]) & (t.child[t.root] != NULL)
+    n = np.where(lane_ok, n, -1)
+    return int(np.argmax(n))

@@ -1,0 +1,96 @@
+"""Edge scoring (paper Eq. 1 + virtual-loss variants), backend-generic.
+
+One scoring routine shared — verbatim — by the sequential numpy oracle,
+the batched jit ops and the Pallas kernel reference.  All inputs are
+integers (counts + Qm.16 sums); all transcendental inputs come from the
+shared ln-table; every float op used (convert / divide / sqrt / add /
+multiply-by-pow2 / round) is IEEE-754 correctly rounded, so numpy-f32 and
+jax-f32 produce bit-identical scores and therefore identical argmax
+decisions.  This is how the paper's "exact same outputs as a CPU-only
+system" claim survives vectorization.
+
+Shapes: edge inputs are ``[..., Fp]``; node inputs broadcast as ``[..., 1]``.
+Returns int32 fixed-point scores ``[..., Fp]`` where invalid lanes are
+FX_NEG_INF and never-visited edges are FX_FORCE_EXPLORE (uct) so they win
+any comparison against real scores (<= FX_MAX).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fixedpoint as fx
+from repro.core.tree import NULL, TreeConfig
+
+
+def edge_scores_fx(
+    cfg: TreeConfig,
+    *,
+    child,        # [..., Fp] i32
+    edge_N,       # [..., Fp] i32
+    edge_W,       # [..., Fp] i32 (Qm.16)
+    edge_VL,      # [..., Fp] i32
+    edge_P,       # [..., Fp] i32 (Qm.16)
+    node_N,       # [..., 1]  i32
+    node_O,       # [..., 1]  i32
+    num_actions,  # [..., 1]  i32
+    log_table=None,  # [2X+4] f32 (omit iff log_ns given)
+    xp=np,
+    lane=None,       # optional precomputed lane-index array [..., Fp]
+                     # (Pallas kernels pass a 2-D broadcasted iota: 1-D iota
+                     #  does not lower on TPU)
+    log_ns=None,     # optional precomputed ln(ns) [..., 1] f32 (kernels do
+                     #  the scalar table load themselves)
+):
+    i32, f32 = xp.int32, xp.float32
+    Fp = child.shape[-1]
+    if lane is None:
+        lane = xp.arange(Fp, dtype=i32)
+    valid = (lane < num_actions) & (child != NULL)
+
+    if cfg.vl_mode == "wu":
+        ne = edge_N + edge_VL                    # N̄ = N + O (in-flight)
+        ns = node_N + node_O
+    else:
+        ne = edge_N
+        ns = node_N
+    ns = xp.minimum(ns, i32(2 * cfg.X + 3))      # log-table bound (tree.py)
+
+    ne_safe = xp.maximum(ne, i32(1)).astype(f32)
+    if log_ns is None:
+        log_ns = xp.take(log_table, ns, axis=0)  # [..., 1] f32 (shared table)
+
+    if cfg.score_fn == "uct":
+        q = (edge_W.astype(f32) * f32(fx.FX_INV_SCALE)) / ne_safe
+        u = f32(cfg.beta) * xp.sqrt(log_ns / ne_safe)
+        base = fx.encode(q + u, xp=xp)
+        base = xp.where(ne == 0, fx.FX_FORCE_EXPLORE, base)
+    else:  # puct: Q + c * P * sqrt(Ns) / (1 + Ne); Q := 0 when unvisited
+        q = (edge_W.astype(f32) * f32(fx.FX_INV_SCALE)) / ne_safe
+        q = xp.where(ne == 0, f32(0.0), q)
+        sqrt_ns = xp.sqrt(ns.astype(f32))
+        p_f = edge_P.astype(f32) * f32(fx.FX_INV_SCALE)
+        u = f32(cfg.beta) * p_f * sqrt_ns / (f32(1.0) + ne.astype(f32))
+        base = fx.encode(q + u, xp=xp)
+
+    if cfg.vl_mode == "constant":
+        # Paper Alg. 1 line 5: uct(s, s_hat) -= VL, applied per in-flight
+        # worker; exact integer arithmetic in the Qm.16 domain.
+        base = base - i32(cfg.vl_const_fx) * edge_VL
+
+    return xp.where(valid, base, fx.FX_NEG_INF)
+
+
+def argmax_first(scores_fx, xp=np):
+    """First-maximum argmax over the last axis (deterministic tie-break,
+    matching both np.argmax and jnp.argmax semantics)."""
+    return xp.argmax(scores_fx, axis=-1).astype(xp.int32)
+
+
+def is_leaf(cfg: TreeConfig, *, num_expanded, num_actions, terminal, depth, xp=np):
+    """Selection-leaf predicate (paper §II-A; see TreeConfig.leaf_mode)."""
+    if cfg.leaf_mode == "partial":
+        open_node = num_expanded < num_actions
+    else:
+        open_node = num_expanded == 0
+    return open_node | (terminal != 0) | (depth >= cfg.D) | (num_actions == 0)

@@ -1,0 +1,195 @@
+"""UCT data structure (paper §III-A).
+
+The paper decomposes the MCTS tree into the UCT (node/edge statistics,
+accelerator SRAM) and the ST (environment states, host DRAM).  This module
+is the UCT: a fixed-capacity struct-of-arrays holding every statistic the
+in-tree operations touch, and nothing application-specific.
+
+Layout notes (TPU adaptation of the paper's per-level SRAM banks):
+  * all edge arrays are ``[X, Fp]`` with ``Fp`` = F rounded up to a power of
+    two (<= 128) so a node's edge block never straddles a 128-lane VMEM row
+    when flattened — see kernels/uct_select.py;
+  * node ids are allocated in insertion order, which for the BSP execution
+    model means ids are also grouped by superstep; the paper's level-bank
+    partitioning is recovered through ``node_depth`` (used by the resource
+    report, Table I analogue);
+  * edge value sums (``edge_W``) and priors (``edge_P``) are stored in
+    Qm.16 fixed point (paper §IV-C) so every in-tree update is an integer
+    add — exact, commutative, and bit-reproducible across the numpy oracle,
+    the jit batched ops, and the Pallas kernels.
+
+Capacity is allocated for ``X`` nodes (the paper statically allocates banks
+for a full F-ary tree of height D; with F=36/D=5 a full tree is ~60M nodes
+against X=48K actually reachable, so we keep the X cap — the full-tree
+allocation is an FPGA synthesis constraint with no TPU benefit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fx
+
+NULL = -1  # sentinel child / node index
+
+
+def pad_fanout(f: int) -> int:
+    """Round F up to a power of two <= 128 (VMEM row alignment)."""
+    if f > 128:
+        raise NotImplementedError(f"fanout {f} > 128: multi-row edge blocks not implemented")
+    p = 1
+    while p < f:
+        p <<= 1
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeConfig:
+    """Static configuration of the in-tree machinery.
+
+    vl_mode:
+      * "wu"       — WU-UCT visit-count virtual loss [Liu et al., ICLR'20]:
+                     incomplete-visit counters enter both uct terms.
+      * "constant" — constant virtual loss [Chaslot et al. '08]: a fixed
+                     penalty per in-flight worker is subtracted from the
+                     edge weight (paper Alg. 1 line 5 semantics).
+    score_fn:
+      * "uct"  — Eq. 1 of the paper.
+      * "puct" — AlphaZero-style prior-weighted variant (the paper's Gomoku
+                 benchmark [9] uses a policy-value DNN; PUCT is its native
+                 score).
+    leaf_mode:
+      * "partial"    — a node is a selection leaf while any child is
+                       unexpanded (paper §II-A definition).
+      * "unexpanded" — a node is a leaf until its first expansion; used with
+                       expand_all=True (Gomoku benchmark expands all F
+                       children at once, paper §V-A).
+    """
+
+    X: int
+    F: int
+    D: int
+    beta: float = 1.0
+    vl_mode: str = "wu"
+    vl_const: float = 1.0
+    score_fn: str = "uct"
+    leaf_mode: str = "partial"
+    expand_all: bool = False
+
+    def __post_init__(self):
+        assert self.vl_mode in ("wu", "constant"), self.vl_mode
+        assert self.score_fn in ("uct", "puct"), self.score_fn
+        assert self.leaf_mode in ("partial", "unexpanded"), self.leaf_mode
+        assert self.X >= 2 and self.F >= 1 and self.D >= 1
+
+    @property
+    def Fp(self) -> int:
+        return pad_fanout(self.F)
+
+    @property
+    def vl_const_fx(self) -> int:
+        return fx.encode_scalar(self.vl_const)
+
+    def sram_bytes(self) -> dict:
+        """Table I analogue: bytes of accelerator memory per component."""
+        edge_arrays = 4 + (1 if self.score_fn == "puct" else 0)  # child,N,W,VL(,P)
+        node_arrays = 5  # node_N, node_O, num_expanded, num_actions, node_depth
+        per_edge = 4 * edge_arrays
+        per_node = 4 * node_arrays
+        return {
+            "edge_bytes": self.X * self.Fp * per_edge,
+            "node_bytes": self.X * per_node,
+            "log_table_bytes": 4 * (self.X + 2),
+            "total_bytes": self.X * self.Fp * per_edge + self.X * per_node + 4 * (self.X + 2),
+        }
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class UCTree:
+    """The UCT — everything the accelerator touches, nothing else."""
+
+    child: Any         # [X, Fp] i32  child node id or NULL
+    edge_N: Any        # [X, Fp] i32  completed visits through edge
+    edge_W: Any        # [X, Fp] i32  Qm.16 sum of backed-up values
+    edge_VL: Any       # [X, Fp] i32  in-flight (virtual-loss) count
+    edge_P: Any        # [X, Fp] i32  Qm.16 prior (puct only; zeros otherwise)
+    node_N: Any        # [X] i32      completed visits of node
+    node_O: Any        # [X] i32      in-flight visits of node (WU-UCT O_s)
+    num_expanded: Any  # [X] i32
+    num_actions: Any   # [X] i32      legal-action count (<= F)
+    node_depth: Any    # [X] i32
+    terminal: Any      # [X] i32      1 if state is terminal (never internal)
+    size: Any          # [] i32       next free node id
+    root: Any          # [] i32
+    log_table: Any     # [2X+4] f32   ln(n) table shared by all backends
+
+    @property
+    def X(self) -> int:
+        return self.child.shape[0]
+
+    @property
+    def Fp(self) -> int:
+        return self.child.shape[1]
+
+
+def make_log_table(x: int) -> np.ndarray:
+    """ln(n) lookup shared by every backend.
+
+    Computed once in f64 then cast, so numpy-oracle / jit-jax / Pallas all
+    read bit-identical values (libm ``log`` implementations may differ by an
+    ulp between backends; a shared table removes that hazard — the TPU
+    version of the paper's 'deterministic fixed-point compare' argument).
+    Sized 2X+4 and index-clamped: node visit counts can exceed X when the
+    tree is capacity-saturated but workers keep iterating.
+    """
+    n = np.arange(2 * x + 4, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        t = np.log(n)
+    t[0] = 0.0
+    return t.astype(np.float32)
+
+
+def init_tree(cfg: TreeConfig, root_num_actions: int | None = None, xp=jnp) -> UCTree:
+    """Fresh tree with a single root node (id 0)."""
+    X, Fp = cfg.X, cfg.Fp
+    i32 = xp.int32
+    z_e = xp.zeros((X, Fp), dtype=i32)
+    na = cfg.F if root_num_actions is None else int(root_num_actions)
+    num_actions = xp.zeros((X,), dtype=i32)
+    if xp is np:
+        child = np.full((X, Fp), NULL, dtype=np.int32)
+        num_actions = num_actions.copy()
+        num_actions[0] = na
+    else:
+        child = xp.full((X, Fp), NULL, dtype=i32)
+        num_actions = num_actions.at[0].set(na)
+    return UCTree(
+        child=child,
+        edge_N=z_e,
+        edge_W=z_e,
+        edge_VL=z_e,
+        edge_P=z_e,
+        node_N=xp.zeros((X,), dtype=i32),
+        node_O=xp.zeros((X,), dtype=i32),
+        num_expanded=xp.zeros((X,), dtype=i32),
+        num_actions=num_actions,
+        node_depth=xp.zeros((X,), dtype=i32),
+        terminal=xp.zeros((X,), dtype=i32),
+        size=xp.asarray(1, dtype=i32) if xp is jnp else np.int32(1),
+        root=xp.asarray(0, dtype=i32) if xp is jnp else np.int32(0),
+        log_table=xp.asarray(make_log_table(X)),
+    )
+
+
+def to_numpy(tree: UCTree) -> UCTree:
+    return jax.tree.map(np.asarray, tree)
+
+
+def to_jax(tree: UCTree) -> UCTree:
+    return jax.tree.map(jnp.asarray, tree)

@@ -1,0 +1,7 @@
+from repro.distributed.checkpoint import (
+    save_checkpoint, restore_checkpoint, latest_step, CheckpointManager,
+)
+from repro.distributed.fault import BSPFaultPolicy, HeartbeatMonitor
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager", "BSPFaultPolicy", "HeartbeatMonitor"]

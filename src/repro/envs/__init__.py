@@ -1,0 +1,5 @@
+from repro.envs.bandit_tree import BanditTreeEnv
+from repro.envs.ponglite import PongLiteEnv
+from repro.envs.gomoku import GomokuEnv, GomokuRolloutBackend
+
+__all__ = ["BanditTreeEnv", "PongLiteEnv", "GomokuEnv", "GomokuRolloutBackend"]

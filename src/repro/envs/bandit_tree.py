@@ -1,0 +1,66 @@
+"""Synthetic deterministic tree environment for tests and microbenchmarks.
+
+A reproducible F-ary decision tree whose terminal rewards come from an
+integer hash of the action history.  Deterministic, hashable, trivially
+cheap — ideal for property tests of the in-tree machinery (the paper's
+correctness claims are about the tree, not the game).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_M64 = (1 << 64) - 1
+
+
+def _hash(h: int, a: int) -> int:
+    """splitmix-style mix; result masked to 24 bits so it round-trips
+    exactly through the f32 ST entry."""
+    x = (int(h) ^ ((int(a) + 0x9E3779B97F4A7C15 + (int(h) << 6)) & _M64)) & _M64
+    x = (x * 0xBF58476D1CE4E5B9) & _M64
+    x ^= x >> 31
+    return int(x & 0xFFFFFF)
+
+
+class BanditTreeEnv:
+    """State: f32[8] = [depth, hash, terminal, n_actions, 0...]."""
+
+    state_shape = (8,)
+    state_dtype = np.float32
+
+    def __init__(self, fanout: int = 6, terminal_depth: int = 12,
+                 varying_fanout: bool = False):
+        self.F = fanout
+        self.max_actions = fanout
+        self.terminal_depth = terminal_depth
+        self.varying_fanout = varying_fanout
+
+    def _na(self, h: int, depth: int) -> int:
+        if depth >= self.terminal_depth:
+            return 0
+        if self.varying_fanout:
+            return 1 + _hash(h, 7777) % self.F
+        return self.F
+
+    def initial_state(self, seed: int) -> np.ndarray:
+        s = np.zeros(8, np.float32)
+        h = _hash(seed, 12345)
+        s[1] = h
+        s[3] = self._na(h, 0)
+        return s
+
+    def num_actions(self, state: np.ndarray) -> int:
+        return int(state[3])
+
+    def step(self, state: np.ndarray, a: int):
+        d, h = int(state[0]), int(state[1])
+        assert 0 <= a < self._na(h, d), (a, self._na(h, d))
+        h2, d2 = _hash(h, a), d + 1
+        term = d2 >= self.terminal_depth
+        s = np.zeros(8, np.float32)
+        s[0], s[1] = d2, h2
+        s[2] = float(term)
+        s[3] = self._na(h2, d2)
+        # dense shaped reward in [-0.5, 0.5], deterministic per transition
+        r = (_hash(h2, 999) % 1000) / 1000.0 - 0.5
+        return s, float(r), term

@@ -1,0 +1,89 @@
+"""Policy-value network for Gomoku (the paper's DNN Simulation backend).
+
+Small AlphaZero-style convnet in raw JAX (no flax): two 3x3 conv blocks,
+a policy head (1x1 conv -> 36 logits) and a value head (tanh scalar).
+Used by NNSimBackend (batch-p inference = the paper's "batch-1 DNN
+inference per worker" aggregated across workers — the batching the paper's
+Fig. 5 says would increase its speedup further) and by the self-play
+training example.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BOARD = 6
+_CELLS = _BOARD * _BOARD
+
+
+def init_params(rng: jax.Array, channels: int = 32) -> dict:
+    k = jax.random.split(rng, 6)
+    he = jax.nn.initializers.he_normal()
+    return {
+        "c1": he(k[0], (3, 3, 2, channels), jnp.float32),
+        "c2": he(k[1], (3, 3, channels, channels), jnp.float32),
+        "pol": he(k[2], (1, 1, channels, 2), jnp.float32),
+        "pol_w": he(k[3], (2 * _CELLS, _CELLS), jnp.float32),
+        "val_w1": he(k[4], (channels * _CELLS, 64), jnp.float32),
+        "val_w2": he(k[5], (64, 1), jnp.float32),
+    }
+
+
+def apply(params: dict, boards: jax.Array):
+    """boards: [B, 6, 6] canonicalized (+1 = player to move).
+    Returns (values [B], logits [B, 36])."""
+    x = jnp.stack([(boards > 0).astype(jnp.float32),
+                   (boards < 0).astype(jnp.float32)], axis=-1)  # [B,6,6,2]
+    dn = jax.lax.conv_dimension_numbers(x.shape, params["c1"].shape,
+                                        ("NHWC", "HWIO", "NHWC"))
+    x = jax.nn.relu(jax.lax.conv_general_dilated(
+        x, params["c1"], (1, 1), "SAME", dimension_numbers=dn))
+    x = jax.nn.relu(jax.lax.conv_general_dilated(
+        x, params["c2"], (1, 1), "SAME", dimension_numbers=dn))
+    pol = jax.lax.conv_general_dilated(
+        x, params["pol"], (1, 1), "SAME", dimension_numbers=dn)
+    logits = pol.reshape(pol.shape[0], -1) @ params["pol_w"]
+    v = jax.nn.relu(x.reshape(x.shape[0], -1) @ params["val_w1"])
+    values = jnp.tanh(v @ params["val_w2"])[:, 0]
+    return values, logits
+
+
+@functools.partial(jax.jit, static_argnums=())
+def _infer(params, boards):
+    return apply(params, boards)
+
+
+class NNSimBackend:
+    """DNN inference simulation backend (paper Gomoku benchmark).
+
+    evaluate() returns values from the player-to-move perspective and
+    priors over *legal actions in legal order* (the driver's action
+    indexing), padded to max_actions.
+    """
+
+    def __init__(self, env, params: dict):
+        self.env, self.params = env, params
+
+    def evaluate(self, states: np.ndarray):
+        B = len(states)
+        boards = states[:, 3 : 3 + _CELLS].reshape(B, _BOARD, _BOARD)
+        to_move = states[:, 0:1]
+        canon = boards * to_move[:, :, None]
+        values, logits = jax.device_get(
+            _infer(self.params, jnp.asarray(canon, jnp.float32)))
+        vals = np.array(values, np.float32)  # copy: device_get is read-only
+        pri = np.zeros((B, self.env.max_actions), np.float32)
+        for i in range(B):
+            if states[i, 1]:  # terminal: exact value, no priors
+                w, me = states[i, 2], states[i, 0]
+                vals[i] = 0.0 if w == 0 else (1.0 if w == me else -1.0)
+                continue
+            legal = np.flatnonzero(states[i, 3 : 3 + _CELLS] == 0)
+            z = logits[i, legal]
+            z = np.exp(z - z.max())
+            pri[i, : len(legal)] = z / z.sum()
+        return vals, pri

@@ -1,0 +1,97 @@
+"""Shared helpers for the UCT Pallas kernels.
+
+Memory layout (TPU adaptation of the paper's SRAM banking, §IV-B):
+
+The paper stores the UCT as a compact adjacency list in per-level SRAM
+banks sized for single-cycle access.  On TPU the analogue is VMEM
+residency with VPU-aligned rows: every ``[X, Fp]`` edge-statistic array is
+packed into ``[X*Fp/128, 128]`` int32 so that
+
+  * a node's Fp-edge block lives in ONE 128-lane VMEM row (Fp is a power
+    of two <= 128, so blocks never straddle rows) — one vector load plays
+    the role of the paper's one-cycle bank read;
+  * the selection comparator is a masked 128-lane argmax — the VPU-native
+    replacement of the paper's CLUT comparator tree (§IV-D), which has no
+    TPU analogue;
+  * updates are full-row read-modify-writes (no sub-lane dynamic stores,
+    which Mosaic lowers poorly).
+
+Node-indexed ``[X]`` arrays are packed into ``[ceil(X/128), 128]`` rows and
+accessed with the same row RMW discipline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+
+
+def padded_x(x: int, fp: int) -> int:
+    """Smallest X' >= x with X'*Fp a multiple of 128."""
+    step = max(1, LANES // fp)
+    return ((x + step - 1) // step) * step
+
+
+def pack_edges(arr, fp: int):
+    """[X, Fp] -> [Xp*Fp/128, 128] (row-aligned node blocks)."""
+    x = arr.shape[0]
+    xp_ = padded_x(x, fp)
+    if xp_ != x:
+        arr = jnp.concatenate(
+            [arr, jnp.zeros((xp_ - x, fp), arr.dtype)], axis=0)
+    return arr.reshape(xp_ * fp // LANES, LANES)
+
+
+def unpack_edges(packed, x: int, fp: int):
+    return packed.reshape(-1, fp)[:x]
+
+
+def pack_nodes(arr):
+    """[X] -> [ceil(X/128), 128]."""
+    x = arr.shape[0]
+    xp_ = ((x + LANES - 1) // LANES) * LANES
+    if xp_ != x:
+        arr = jnp.concatenate([arr, jnp.zeros((xp_ - x,), arr.dtype)])
+    return arr.reshape(xp_ // LANES, LANES)
+
+
+def unpack_nodes(packed, x: int):
+    return packed.reshape(-1)[:x]
+
+
+# ---- in-kernel access helpers (all row-granular) -------------------------
+
+def lane_iota():
+    """[1, 128] lane indices (2-D: 1-D iota does not lower on TPU)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
+
+
+def load_row(ref, row):
+    """One 128-lane row as [1, 128]."""
+    return pl.load(ref, (pl.dslice(row, 1), slice(None)))
+
+
+def store_row(ref, row, val):
+    pl.store(ref, (pl.dslice(row, 1), slice(None)), val)
+
+
+def sload(ref, idx):
+    """Scalar load from a packed node array."""
+    row = load_row(ref, idx // LANES)
+    return jax.lax.dynamic_slice(row, (0, idx % LANES), (1, 1))[0, 0]
+
+
+def sadd(ref, idx, inc):
+    """Scalar add via full-row RMW (vectorized select, no sub-lane store)."""
+    row_i = idx // LANES
+    row = load_row(ref, row_i)
+    upd = jnp.where(lane_iota() == (idx % LANES), inc, 0).astype(row.dtype)
+    store_row(ref, row_i, row + upd)
+
+
+def extract_lane(vec_1x128, lane):
+    """vec[0, lane] for traced lane index."""
+    return jax.lax.dynamic_slice(vec_1x128, (0, lane), (1, 1))[0, 0]

@@ -1,0 +1,41 @@
+"""jit'd wrappers exposing the Pallas kernels through the same API as
+repro.core.intree, so the BSP driver can swap executors freely
+(executor="pallas").
+
+Kernels run in interpret mode by default (this container is CPU-only; the
+TPU backend is the compilation target).  Pass interpret=False on real TPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core import intree
+from repro.core.tree import TreeConfig, UCTree
+from repro.kernels import uct_backup, uct_select
+
+INTERPRET = True  # flipped to False on a real TPU deployment
+
+
+def select_batch(cfg: TreeConfig, tree: UCTree, p: int):
+    """Selection + Node-Insertion assignment; mirrors intree.select_batch."""
+    evl, no, pn, pa, depths, leaves = uct_select.select(
+        cfg, tree, p, interpret=INTERPRET)
+    tree = dataclasses.replace(tree, edge_VL=evl, node_O=no)
+    return intree._assign_expansions(cfg, tree, pn, pa, depths, leaves, p)
+
+
+def backup_batch(cfg: TreeConfig, tree: UCTree, sel, sim_nodes, values_fx,
+                 alternating_signs: bool = False):
+    """BackUp; mirrors intree.backup_batch."""
+    p = sel.leaves.shape[0]
+    en, ew, evl, nn, no = uct_backup.backup(
+        cfg, tree, sel.path_nodes, sel.path_actions,
+        jnp.asarray(sel.depths), jnp.asarray(sel.leaves),
+        jnp.asarray(sel.expand_action), jnp.asarray(sim_nodes, jnp.int32),
+        jnp.asarray(values_fx, jnp.int32), p=p,
+        alternating=alternating_signs, interpret=INTERPRET)
+    return dataclasses.replace(
+        tree, edge_N=en, edge_W=ew, edge_VL=evl, node_N=nn, node_O=no)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+The reference chain is two layers deep, both tested:
+  Pallas kernels (this package)  ==  intree batched jnp ops (this module)
+  intree batched jnp ops         ==  ref_sequential numpy CPU program
+
+so kernels are transitively bit-exact against the paper's sequential
+baseline.  The re-exports below are the "ref.py pure-jnp oracle" contract
+for the per-kernel sweep tests.
+"""
+
+from repro.core.intree import (
+    backup_batch as backup_ref,
+    select_batch as select_ref,
+)
+
+__all__ = ["select_ref", "backup_ref"]

@@ -1,0 +1,172 @@
+"""Pallas TPU kernel: BackUp from memoized selection paths (paper §IV-E).
+
+The paper attaches a (D-1)-word memoization buffer to each worker during
+Selection so BackUp never re-walks the tree; the FPGA then streams workers
+through the pipeline, updating one level per stage.  Here the memoized
+paths arrive as the `path_nodes`/`path_actions` arrays produced by the
+selection kernel, and every update is an exact Qm.16 integer add performed
+as a full-row VMEM read-modify-write.
+
+Integer adds commute, so although this kernel loops workers in order (to
+mirror the paper's pipeline), the result is independent of worker order —
+the property the vectorized jnp fallback (core.intree.backup_batch)
+exploits; both are bit-identical to the sequential CPU program.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.tree import NULL, TreeConfig
+from repro.kernels import common as cm
+
+LANES = cm.LANES
+
+
+def _backup_kernel(
+    # inputs
+    pn_ref,        # [p, D] i32 memoized path nodes
+    pa_ref,        # [p, D] i32 memoized path actions
+    depth_ref,     # [1, p] i32
+    leaf_ref,      # [1, p] i32
+    ea_ref,        # [1, p] i32 expand_action
+    simn_ref,      # [1, p] i32 sim nodes
+    val_ref,       # [1, p] i32 Qm.16 values
+    en_in_ref, ew_in_ref, evl_in_ref, nn_in_ref, no_in_ref,   # aliased ins
+    # outputs (aliased)
+    edge_n_ref,    # [Er, 128] i32
+    edge_w_ref,    # [Er, 128] i32
+    edge_vl_ref,   # [Er, 128] i32
+    node_n_ref,    # [Nr, 128] i32
+    node_o_ref,    # [Nr, 128] i32
+    *,
+    cfg: TreeConfig,
+    p: int,
+    alternating: bool,
+):
+    Fp, D = cfg.Fp, cfg.D
+    i32 = jnp.int32
+    lane = cm.lane_iota()
+
+    edge_n_ref[...] = en_in_ref[...]
+    edge_w_ref[...] = ew_in_ref[...]
+    edge_vl_ref[...] = evl_in_ref[...]
+    node_n_ref[...] = nn_in_ref[...]
+    node_o_ref[...] = no_in_ref[...]
+
+    def row_of(x):  # [1,p] ref scalar extraction
+        return lambda j: cm.extract_lane(pl.load(x, (slice(None), slice(None))), j)
+
+    get_depth, get_leaf = row_of(depth_ref), row_of(leaf_ref)
+    get_ea, get_sim, get_val = row_of(ea_ref), row_of(simn_ref), row_of(val_ref)
+
+    def worker(j, _):
+        depth = get_depth(j)
+        leaf = get_leaf(j)
+        ea = get_ea(j)
+        sim = get_sim(j)
+        v = get_val(j)
+        expanded = (ea >= 0) & jnp.asarray(not cfg.expand_all)
+        sim_depth = depth + jnp.where(expanded, i32(1), i32(0))
+
+        def level(d, _):
+            pn_row = pl.load(pn_ref, (pl.dslice(j, 1), slice(None)))
+            pa_row = pl.load(pa_ref, (pl.dslice(j, 1), slice(None)))
+            node = cm.extract_lane(pn_row, d)
+            a = cm.extract_lane(pa_row, d)
+            on = (d < depth) & (node != NULL)
+            node = jnp.where(on, node, i32(0))   # keep addresses in-bounds
+            a = jnp.where(on, a, i32(0))         # (masked updates below)
+            inc = jnp.where(on, i32(1), i32(0))
+            if alternating:
+                sign = jnp.where((sim_depth - d) % 2 == 1, i32(-1), i32(1))
+            else:
+                sign = i32(1)
+            row = node * Fp // LANES
+            tgt = (lane == node * Fp % LANES + a)
+            upd = jnp.where(tgt, inc, i32(0))
+            cm.store_row(edge_n_ref, row, cm.load_row(edge_n_ref, row) + upd)
+            cm.store_row(edge_w_ref, row,
+                         cm.load_row(edge_w_ref, row) + upd * sign * v)
+            cm.store_row(edge_vl_ref, row,
+                         cm.load_row(edge_vl_ref, row) - upd)
+            cm.sadd(node_n_ref, node, inc)
+            cm.sadd(node_o_ref, node, -inc)
+            return 0
+
+        jax.lax.fori_loop(0, D, level, 0)
+        cm.sadd(node_n_ref, leaf, 1)
+        cm.sadd(node_o_ref, leaf, -1)
+
+        # expansion edge (single-expand mode): seed sim node's in-edge
+        e_inc = jnp.where(expanded, i32(1), i32(0))
+        if alternating:
+            e_sign = jnp.where((sim_depth - depth) % 2 == 1, i32(-1), i32(1))
+        else:
+            e_sign = i32(1)
+        row = leaf * Fp // LANES
+        tgt = lane == leaf * Fp % LANES + ea
+        upd = jnp.where(tgt, e_inc, i32(0))
+        cm.store_row(edge_n_ref, row, cm.load_row(edge_n_ref, row) + upd)
+        cm.store_row(edge_w_ref, row,
+                     cm.load_row(edge_w_ref, row) + upd * e_sign * v)
+        cm.sadd(node_n_ref, jnp.where(expanded, sim, leaf),
+                jnp.where(expanded, i32(1), i32(0)))
+        return 0
+
+    jax.lax.fori_loop(0, p, worker, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "p", "alternating", "interpret"))
+def backup(cfg: TreeConfig, tree, pn, pa, depths, leaves, expand_action,
+           sim_nodes, values_fx, p: int, alternating: bool = False,
+           interpret: bool = True):
+    """Run the backup kernel; returns updated (edge_N, edge_W, edge_VL,
+    node_N, node_O) in logical shapes."""
+    Fp, X = cfg.Fp, tree.X
+    en_p = cm.pack_edges(tree.edge_N, Fp)
+    ew_p = cm.pack_edges(tree.edge_W, Fp)
+    evl_p = cm.pack_edges(tree.edge_VL, Fp)
+    nn_p = cm.pack_nodes(tree.node_N)
+    no_p = cm.pack_nodes(tree.node_O)
+    er, nr = en_p.shape[0], nn_p.shape[0]
+    D = cfg.D
+
+    full = lambda shp: pl.BlockSpec(shp, lambda: tuple(0 for _ in shp))
+    out_shapes = tuple(
+        jax.ShapeDtypeStruct((er, LANES), jnp.int32) for _ in range(3)
+    ) + tuple(jax.ShapeDtypeStruct((nr, LANES), jnp.int32) for _ in range(2))
+    kernel = functools.partial(
+        _backup_kernel, cfg=cfg, p=p, alternating=alternating)
+    en2, ew2, evl2, nn2, no2 = pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        in_specs=[
+            full((p, D)), full((p, D)), full((1, p)), full((1, p)),
+            full((1, p)), full((1, p)), full((1, p)),
+            full((er, LANES)), full((er, LANES)), full((er, LANES)),
+            full((nr, LANES)), full((nr, LANES)),
+        ],
+        out_specs=[
+            full((er, LANES)), full((er, LANES)), full((er, LANES)),
+            full((nr, LANES)), full((nr, LANES)),
+        ],
+        input_output_aliases={7: 0, 8: 1, 9: 2, 10: 3, 11: 4},
+        interpret=interpret,
+    )(
+        pn, pa, depths.reshape(1, p), leaves.reshape(1, p),
+        expand_action.reshape(1, p), sim_nodes.reshape(1, p),
+        values_fx.reshape(1, p),
+        en_p, ew_p, evl_p, nn_p, no_p,
+    )
+    return (
+        cm.unpack_edges(en2, X, Fp),
+        cm.unpack_edges(ew2, X, Fp),
+        cm.unpack_edges(evl2, X, Fp),
+        cm.unpack_nodes(nn2, X),
+        cm.unpack_nodes(no2, X),
+    )

@@ -1,0 +1,213 @@
+"""Pallas TPU kernel: Tree-Parallel Selection + virtual-loss apply.
+
+This is the accelerator core of the paper (§IV-B/C/D) adapted to TPU:
+
+  paper FPGA                         | this kernel
+  -----------------------------------+----------------------------------
+  per-level SRAM banks, 1-cycle read | UCT packed row-aligned in VMEM
+  subtree pipelines (1 worker/stage) | fori_loop over workers: identical
+                                     | ordering semantics, VMEM-resident
+  CLUT comparator tree at the root   | masked 128-lane VPU argmax
+  fixed-point single-cycle compare   | Qm.16 int32 scores (exact compare)
+  backup memoization buffer          | path_nodes/path_actions outputs
+
+The whole UCT (all edge/node statistic arrays) is one VMEM working set —
+"T_mem = 1 cycle" becomes "zero HBM traffic after tile load".  Worker
+ordering is preserved exactly (worker k sees the virtual loss of workers
+< k), so outputs are bit-identical to the sequential CPU program; the
+kernel shares the scoring spec of repro.core.scoring verbatim.
+
+The kernel is written for the TPU backend (2-D iotas, row-granular RMW,
+power-of-two edge blocks) and validated in interpret mode on CPU; scalar
+operands (root id, tree size) ride in [1,1] VMEM rows — a production build
+would hoist them to SMEM scalar prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import fixedpoint as fx
+from repro.core import scoring
+from repro.core.tree import NULL, TreeConfig
+from repro.kernels import common as cm
+
+LANES = cm.LANES
+
+
+def _select_kernel(
+    # inputs
+    root_ref,        # [1,1] i32
+    child_ref,       # [Er, 128] i32 packed edges
+    edge_n_ref,      # [Er, 128] i32
+    edge_w_ref,      # [Er, 128] i32 (Qm.16)
+    edge_p_ref,      # [Er, 128] i32 (Qm.16)
+    node_n_ref,      # [Nr, 128] i32 packed nodes
+    num_exp_ref,     # [Nr, 128] i32
+    num_act_ref,     # [Nr, 128] i32
+    terminal_ref,    # [Nr, 128] i32
+    log_ref,         # [Lr, 128] f32 packed ln table
+    evl_in_ref,      # [Er, 128] i32 (aliased with edge_vl_ref)
+    no_in_ref,       # [Nr, 128] i32 (aliased with node_o_ref)
+    # outputs
+    edge_vl_ref,     # [Er, 128] i32
+    node_o_ref,      # [Nr, 128] i32
+    pn_ref,          # [p, D] i32
+    pa_ref,          # [p, D] i32
+    depth_ref,       # [1, p] i32
+    leaf_ref,        # [1, p] i32
+    *,
+    cfg: TreeConfig,
+    p: int,
+):
+    Fp, D = cfg.Fp, cfg.D
+    lane = cm.lane_iota()
+    i32 = jnp.int32
+
+    # Aliased buffers: physically a no-op copy; keeps the kernel correct
+    # when run un-aliased (e.g. some interpret configurations).
+    edge_vl_ref[...] = evl_in_ref[...]
+    node_o_ref[...] = no_in_ref[...]
+    # init path outputs to NULL
+    pn_ref[...] = jnp.full((p, D), NULL, i32)
+    pa_ref[...] = jnp.full((p, D), NULL, i32)
+    root = root_ref[0, 0]
+
+    def worker(j, _):
+        cm.sadd(node_o_ref, root, 1)
+
+        def level(d, carry):
+            node, depth = carry
+            n_exp = cm.sload(num_exp_ref, node)
+            n_act = cm.sload(num_act_ref, node)
+            term = cm.sload(terminal_ref, node)
+            leafp = scoring.is_leaf(
+                cfg, num_expanded=n_exp, num_actions=n_act,
+                terminal=term, depth=depth, xp=jnp)
+            active = (~leafp) & (d == depth)
+
+            row = node * Fp // LANES
+            off = node * Fp % LANES
+            child_r = cm.load_row(child_ref, row)
+            seg = (lane >= off) & (lane < off + Fp)
+            child_m = jnp.where(seg, child_r, NULL)
+
+            n_n = cm.sload(node_n_ref, node)
+            n_o = cm.sload(node_o_ref, node)
+            ns = n_n + n_o if cfg.vl_mode == "wu" else n_n
+            ns = jnp.minimum(ns, i32(2 * cfg.X + 3))
+            log_ns = cm.sload(log_ref, ns)
+
+            scores = scoring.edge_scores_fx(
+                cfg,
+                child=child_m,
+                edge_N=cm.load_row(edge_n_ref, row),
+                edge_W=cm.load_row(edge_w_ref, row),
+                edge_VL=cm.load_row(edge_vl_ref, row),
+                edge_P=cm.load_row(edge_p_ref, row),
+                node_N=n_n[None, None],
+                node_O=n_o[None, None],
+                num_actions=(off + n_act)[None, None],
+                xp=jnp,
+                lane=lane,                      # lane < off + n_act validity
+                log_ns=log_ns[None, None],
+            )
+            # VPU-native worker distributor (paper's CLUT, §IV-D): masked
+            # first-max argmax over the full 128-lane row, as two 2-D
+            # reductions (max, then min-index-of-max) — Mosaic-friendly.
+            m = jnp.max(scores)
+            g = jnp.min(jnp.where(scores == m, lane, i32(LANES))).astype(i32)
+
+            # virtual-loss apply (Alg. 1 line 5) — row RMW
+            vl_row = cm.load_row(edge_vl_ref, row)
+            inc = jnp.where(active & (lane == g), i32(1), i32(0))
+            cm.store_row(edge_vl_ref, row, vl_row + inc)
+
+            # memoization buffer write (paper §IV-E)
+            d_lane = jax.lax.broadcasted_iota(i32, (1, D), 1)
+            pn_row = pl.load(pn_ref, (pl.dslice(j, 1), slice(None)))
+            pa_row = pl.load(pa_ref, (pl.dslice(j, 1), slice(None)))
+            sel_d = active & (d_lane == d)
+            pl.store(pn_ref, (pl.dslice(j, 1), slice(None)),
+                     jnp.where(sel_d, node, pn_row))
+            pl.store(pa_ref, (pl.dslice(j, 1), slice(None)),
+                     jnp.where(sel_d, g - off, pa_row))
+
+            nxt = cm.extract_lane(child_m, g)
+            node = jnp.where(active, nxt, node)
+            cm.sadd(node_o_ref, node, jnp.where(active, i32(1), i32(0)))
+            depth = depth + jnp.where(active, i32(1), i32(0))
+            return node, depth
+
+        node, depth = jax.lax.fori_loop(0, D, level, (root, i32(0)))
+        dep_row = pl.load(depth_ref, (slice(None), slice(None)))
+        leaf_row = pl.load(leaf_ref, (slice(None), slice(None)))
+        sel_j = jax.lax.broadcasted_iota(i32, (1, p), 1) == j
+        pl.store(depth_ref, (slice(None), slice(None)),
+                 jnp.where(sel_j, depth, dep_row))
+        pl.store(leaf_ref, (slice(None), slice(None)),
+                 jnp.where(sel_j, node, leaf_row))
+        return 0
+
+    depth_ref[...] = jnp.zeros((1, p), i32)
+    leaf_ref[...] = jnp.zeros((1, p), i32)
+    jax.lax.fori_loop(0, p, worker, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "p", "interpret"))
+def select(cfg: TreeConfig, tree, p: int, interpret: bool = True):
+    """Run the selection kernel.  Returns (edge_VL', node_O', path_nodes,
+    path_actions, depths, leaves) with logical (unpacked) shapes."""
+    Fp, X, D = cfg.Fp, tree.X, cfg.D
+    child_p = cm.pack_edges(tree.child, Fp)
+    en_p = cm.pack_edges(tree.edge_N, Fp)
+    ew_p = cm.pack_edges(tree.edge_W, Fp)
+    ep_p = cm.pack_edges(tree.edge_P, Fp)
+    evl_p = cm.pack_edges(tree.edge_VL, Fp)
+    nn_p = cm.pack_nodes(tree.node_N)
+    no_p = cm.pack_nodes(tree.node_O)
+    ne_p = cm.pack_nodes(tree.num_expanded)
+    na_p = cm.pack_nodes(tree.num_actions)
+    tm_p = cm.pack_nodes(tree.terminal)
+    lg_p = cm.pack_nodes(tree.log_table)
+    root = tree.root.reshape(1, 1)
+
+    er, nr, lr = child_p.shape[0], nn_p.shape[0], lg_p.shape[0]
+    full = lambda shp: pl.BlockSpec(shp, lambda: tuple(0 for _ in shp))
+    out_shapes = (
+        jax.ShapeDtypeStruct((er, LANES), jnp.int32),   # edge_VL'
+        jax.ShapeDtypeStruct((nr, LANES), jnp.int32),   # node_O'
+        jax.ShapeDtypeStruct((p, D), jnp.int32),        # path_nodes
+        jax.ShapeDtypeStruct((p, D), jnp.int32),        # path_actions
+        jax.ShapeDtypeStruct((1, p), jnp.int32),        # depths
+        jax.ShapeDtypeStruct((1, p), jnp.int32),        # leaves
+    )
+    kernel = functools.partial(_select_kernel, cfg=cfg, p=p)
+    evl2, no2, pn, pa, dep, leaf = pl.pallas_call(
+        kernel,
+        out_shape=out_shapes,
+        in_specs=[
+            full((1, 1)),
+            full((er, LANES)), full((er, LANES)), full((er, LANES)),
+            full((er, LANES)),
+            full((nr, LANES)), full((nr, LANES)), full((nr, LANES)),
+            full((nr, LANES)), full((lr, LANES)),
+            full((er, LANES)), full((nr, LANES)),
+        ],
+        out_specs=[
+            full((er, LANES)), full((nr, LANES)),
+            full((p, D)), full((p, D)), full((1, p)), full((1, p)),
+        ],
+        input_output_aliases={10: 0, 11: 1},
+        interpret=interpret,
+    )(root, child_p, en_p, ew_p, ep_p, nn_p, ne_p, na_p, tm_p, lg_p,
+      evl_p, no_p)
+    return (
+        cm.unpack_edges(evl2, X, Fp),
+        cm.unpack_nodes(no2, X),
+        pn, pa, dep[0], leaf[0],
+    )

@@ -1,0 +1,59 @@
+"""Parse collective traffic out of compiled (post-SPMD) HLO text.
+
+cost_analysis() has no collective-bytes term, so the roofline's third term
+comes from summing the result-shape bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute op in
+compiled.as_text().
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(?P<rtype>\([^)]*\)|[a-z0-9]+\[[^\]]*\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64)\[([0-9,]*)\]")
+
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+          "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+          "f64": 8}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt_, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt_]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_name: result_bytes_total} plus 'total'.  '-done' ops are
+    skipped (their '-start' counterpart carries the payload)."""
+    out = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if f"{m.group('op')}-done" in line:
+            continue
+        out[m.group("op")] += _shape_bytes(m.group("rtype"))
+    out["total"] = sum(v for k, v in out.items())
+    return dict(out)
+
+
+def count_ops(hlo_text: str) -> dict:
+    c = defaultdict(int)
+    for op in _OPS:
+        c[op] = len(re.findall(rf"\b{op}(?:-start)?\(", hlo_text))
+    # remat indicator: duplicated fusions
+    c["fusion"] = hlo_text.count(" fusion(")
+    return dict(c)

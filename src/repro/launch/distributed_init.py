@@ -1,0 +1,35 @@
+"""Multi-host initialization for real pod deployments.
+
+On a TPU pod slice each host runs the same program; jax.distributed wires
+them into one runtime.  This module is the entry shim the launch scripts
+call before anything touches jax device state.  In the CPU container it
+degrades to a no-op single-process world (the dry-run emulates the mesh
+with --xla_force_host_platform_device_count instead).
+
+Environment contract (set by launch/scripts/*.sh or the cluster manager):
+  REPRO_COORDINATOR   host:port of process 0 (default localhost:9911)
+  REPRO_NUM_PROCESSES world size (default 1)
+  REPRO_PROCESS_ID    this host's rank (default 0)
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def init_distributed() -> dict:
+    num = int(os.environ.get("REPRO_NUM_PROCESSES", "1"))
+    pid = int(os.environ.get("REPRO_PROCESS_ID", "0"))
+    coord = os.environ.get("REPRO_COORDINATOR", "localhost:9911")
+    if num > 1:
+        import jax
+        jax.distributed.initialize(
+            coordinator_address=coord,
+            num_processes=num,
+            process_id=pid,
+        )
+    return {"num_processes": num, "process_id": pid, "coordinator": coord}
+
+
+def is_primary() -> bool:
+    return int(os.environ.get("REPRO_PROCESS_ID", "0")) == 0

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * builds the production mesh (16x16 single pod / 2x16x16 multi-pod),
+  * lowers the jitted step (train_step for train_4k; prefill/serve_step
+    for inference shapes) with ShapeDtypeStruct inputs + NamedShardings,
+  * compiles, records memory_analysis / cost_analysis / collective bytes
+    (parsed from post-SPMD HLO) + exact per-device param/opt/cache bytes,
+  * writes one JSON artifact per cell to artifacts/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both [--smoke] [--out artifacts/dryrun]
+
+The XLA_FLAGS line above MUST stay the first statement: jax locks the
+device count on first init.  Do not import this module from tests.
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch import collectives, roofline, specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm, sharding as sh, steps
+from repro.models.config import param_count, active_param_count
+
+HBM_PER_CHIP = 16 * 1024**3          # v5e
+PEAK_FLOPS = 197e12                  # bf16 / chip
+HBM_BW = 819e9                       # B/s / chip
+ICI_BW = 50e9                        # B/s / link
+
+NS = jax.sharding.NamedSharding
+
+
+def lower_cell(cfg, shape, mesh, impl="blockwise", optimized=False):
+    """Returns (lowered, meta) for one cell."""
+    cfg = specs.config_for(cfg, shape, optimized)
+    rules = specs.rules_for(cfg, shape, optimized)
+    sh.set_context(mesh, rules)
+    try:
+        axes = lm.param_axes(cfg)
+        pshapes = lm.param_shapes(cfg)
+        pshard = sh.make_param_shardings(mesh, rules, axes, pshapes)
+        tok = specs.token_specs(cfg, shape)
+        tshard = specs.batch_spec_shardings(mesh, rules, cfg, shape, tok)
+        meta = {"params_bytes_device": specs.sharded_bytes_per_device(
+            pshapes, pshard, mesh)}
+
+        if shape.kind == "train":
+            opt_name, (opt_init, opt_update) = specs.optimizer_for(cfg)
+            oshapes = jax.eval_shape(opt_init, pshapes)
+            oshard = specs.opt_state_shardings(
+                mesh, rules, opt_name, axes, pshapes, oshapes)
+            meta["opt_bytes_device"] = specs.sharded_bytes_per_device(
+                oshapes, oshard, mesh)
+            meta["optimizer"] = opt_name
+            train_step = steps.make_train_step(cfg, opt_update, impl=impl)
+
+            def step(params, opt_state, step_no, batch):
+                return train_step(params, opt_state, step_no, batch)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, oshard, NS(mesh, sh.P()), tshard),
+                out_shardings=(pshard, oshard, None),
+            )
+            lowered = jitted.lower(
+                pshapes, oshapes, jax.ShapeDtypeStruct((), jnp.int32), tok)
+            meta["_traceable"] = (step, (pshapes, oshapes,
+                                         jax.ShapeDtypeStruct((), jnp.int32),
+                                         tok))
+        elif shape.kind == "prefill":
+            cshapes = specs.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+            cshard = specs.cache_shardings(mesh, rules, cshapes)
+            meta["cache_bytes_device"] = specs.sharded_bytes_per_device(
+                cshapes, cshard, mesh)
+            prefill = steps.make_prefill_step(cfg, impl=impl)
+            extra_keys = [k for k in ("patches", "frames") if k in tok]
+
+            def step(params, tokens, caches, *extras):
+                kw = dict(zip(extra_keys, extras))
+                return prefill(params, tokens, caches, **kw)
+
+            jitted = jax.jit(
+                step,
+                in_shardings=(pshard, tshard["tokens"], cshard,
+                              *[tshard[k] for k in extra_keys]),
+                out_shardings=None,
+            )
+            lowered = jitted.lower(pshapes, tok["tokens"], cshapes,
+                                   *[tok[k] for k in extra_keys])
+            meta["_traceable"] = (step, (pshapes, tok["tokens"], cshapes,
+                                         *[tok[k] for k in extra_keys]))
+        else:  # decode
+            cshapes = specs.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+            cshard = specs.cache_shardings(mesh, rules, cshapes)
+            meta["cache_bytes_device"] = specs.sharded_bytes_per_device(
+                cshapes, cshard, mesh)
+            decode = steps.make_decode_step(cfg, impl=impl)
+            jitted = jax.jit(
+                decode,
+                in_shardings=(pshard, cshard, tshard["tokens"],
+                              NS(mesh, sh.P())),
+                out_shardings=(None, cshard),
+            )
+            lowered = jitted.lower(
+                pshapes, cshapes, tok["tokens"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+            meta["_traceable"] = (decode, (pshapes, cshapes, tok["tokens"],
+                                           jax.ShapeDtypeStruct((), jnp.int32)))
+        return lowered, meta
+    finally:
+        sh.set_context(None)
+
+
+def analyze(lowered, compiled, meta, cfg, shape, mesh) -> dict:
+    chips = mesh.size
+    rec = dict(meta)
+    rec["mesh"] = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    rec["chips"] = chips
+
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        # cost_analysis of the SPMD executable is PER-DEVICE (verified:
+        # 6ND/chips for dense archs); totals are derived.
+        rec["hlo_flops_device"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes_device"] = float(ca.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = repr(e)
+        rec["hlo_flops_device"] = rec["hlo_bytes_device"] = 0.0
+    rec["hlo_flops"] = rec["hlo_flops_device"] * chips
+    rec["hlo_bytes"] = rec["hlo_bytes_device"] * chips
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(ma, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = repr(e)
+
+    hlo = compiled.as_text()
+    # the compiled text is the one-device SPMD program: parsed collective
+    # bytes are per-device traffic.  `collectives` counts loop bodies once;
+    # `collectives_scaled` applies while-body trip multipliers.
+    rec["collectives"] = collectives.collective_bytes(hlo)
+    rec["collectives_scaled"] = roofline.scaled_collectives(hlo)
+    rec["collective_ops"] = collectives.count_ops(hlo)
+    rec["hlo_lines"] = hlo.count("\n")
+
+    # trip-count-aware global flops/bytes from the jaxpr (see roofline.py)
+    fn_args = meta.pop("_traceable", None)
+    rec.pop("_traceable", None)
+    if fn_args is not None:
+        try:
+            jc = roofline.jaxpr_costs(fn_args[0], *fn_args[1])
+            rec["jaxpr_flops_global"] = float(jc.get("flops", 0))
+            rec["jaxpr_bytes_global"] = float(jc.get("bytes", 0))
+        except Exception as e:  # pragma: no cover
+            rec["jaxpr_error"] = repr(e)
+
+    # roofline terms (per-step seconds): per-device work over per-chip rate
+    # == brief's total/(chips * rate).
+    fit = rec.get("params_bytes_device", 0) + rec.get("opt_bytes_device", 0) \
+        + rec.get("cache_bytes_device", 0)
+    rec["state_bytes_device"] = fit
+    rec["fits_hbm_state"] = bool(fit < HBM_PER_CHIP)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = active_param_count(cfg)
+    rec["n_params"] = param_count(cfg)
+    rec["n_active_params"] = n_active
+    mult = 6 if shape.kind == "train" else 2
+    rec["model_flops"] = float(mult * n_active * tokens)
+    rec["tokens"] = tokens
+    # roofline terms use the trip-count-corrected analyses; raw
+    # cost_analysis numbers stay in the record for reference.
+    jf = rec.get("jaxpr_flops_global", rec["hlo_flops"])
+    jb = rec.get("jaxpr_bytes_global", rec["hlo_bytes"])
+    rec["compute_s"] = jf / (chips * PEAK_FLOPS)
+    rec["memory_s"] = max(jb / chips,
+                          rec.get("state_bytes_device", 0)) / HBM_BW
+    rec["collective_s"] = rec["collectives_scaled"]["total"] / ICI_BW
+    dom = max(("compute_s", "memory_s", "collective_s"),
+              key=lambda k: rec[k])
+    rec["dominant"] = dom
+    denom = rec.get("jaxpr_flops_global") or rec["hlo_flops"]
+    rec["useful_flops_ratio"] = (
+        rec["model_flops"] / denom if denom else 0.0)
+    return rec
+
+
+def run_cell(arch, shape_name, multi_pod, smoke=False,
+             out_dir="artifacts/dryrun", optimized=False):
+    cfg = configs.get_config(arch, smoke=smoke)
+    shape = configs.SHAPES[shape_name]
+    ok, why = configs.cell_supported(cfg, shape)
+    tag = f"{configs.normalize(arch)}__{shape_name}__{'multi' if multi_pod else 'single'}"
+    outp = pathlib.Path(out_dir)
+    outp.mkdir(parents=True, exist_ok=True)
+    rec = {"arch": cfg.name, "shape": shape_name,
+           "multi_pod": multi_pod, "smoke": smoke, "optimized": optimized}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        (outp / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] {tag}: SKIPPED ({why})", flush=True)
+        return rec
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        lowered, meta = lower_cell(cfg, shape, mesh, optimized=optimized)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec.update(analyze(lowered, compiled, meta, cfg, shape, mesh))
+        rec["status"] = "ok"
+        rec["lower_s"] = t1 - t0
+        rec["compile_s"] = t2 - t1
+        print(f"[dryrun] {tag}: OK lower={t1-t0:.1f}s compile={t2-t1:.1f}s "
+              f"dom={rec['dominant']} flops={rec['hlo_flops']:.3e}", flush=True)
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = repr(e)
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {tag}: ERROR {e!r}", flush=True)
+    (outp / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the §Perf hillclimb layouts (specs.OPTIMIZED_RULES)")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(configs.SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_skip = n_err = 0
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shp, mp, smoke=args.smoke,
+                               out_dir=args.out, optimized=args.optimized)
+                n_ok += rec["status"] == "ok"
+                n_skip += rec["status"] == "skipped"
+                n_err += rec["status"] == "error"
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors",
+          flush=True)
+    return 0 if n_err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

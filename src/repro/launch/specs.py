@@ -1,0 +1,221 @@
+"""Per-cell input specs and sharding rules for the dry-run / launcher.
+
+input_specs() returns ShapeDtypeStruct stand-ins for every input of the
+step being lowered (weak-type-correct, shardable, no device allocation).
+rules_for() picks the sharding rules for an (arch, shape) cell; the
+optimizer choice (adamw vs adafactor) and FSDP flag are part of the arch's
+deployment config (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import lm, sharding as sh
+from repro.models.config import ModelConfig
+from repro.optim import make_optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+# archs whose param+optimizer footprint needs ZeRO-3-style sharding
+FSDP_ARCHS = {"recurrentgemma-9b", "gemma3-12b", "granite-3-8b",
+              "deepseek-v3-671b", "mixtral-8x22b"}
+# archs whose optimizer state must be factored to fit HBM
+ADAFACTOR_ARCHS = {"deepseek-v3-671b", "mixtral-8x22b"}
+
+
+def optimizer_for(cfg: ModelConfig):
+    name = "adafactor" if cfg.name in ADAFACTOR_ARCHS else "adamw"
+    return name, make_optimizer(name, lr=3e-4, warmup=100, total=10_000)
+
+
+def rules_for(cfg: ModelConfig, shape: configs.ShapeSpec,
+              optimized: bool = False) -> sh.Rules:
+    fsdp = cfg.name in FSDP_ARCHS
+    if shape.name == "long_500k":
+        # batch=1: shard the sequence/cache-length dim instead
+        base = sh.Rules(batch=(), seq=("pod", "data"), fsdp_params=fsdp)
+    elif shape.kind == "decode":
+        # HBM-fit iteration (EXPERIMENTS §Perf-0): a 32k KV cache with only
+        # batch sharding leaves up to 40 GB/device (granite); sharding the
+        # cache length over the model axis restores fit — softmax partials
+        # combine with tiny [B,H,1] collectives.
+        base = sh.Rules(batch=("pod", "data"), seq=("model",),
+                        fsdp_params=fsdp)
+    else:
+        base = sh.Rules(batch=("pod", "data"), seq=(), fsdp_params=fsdp)
+    if optimized:
+        base = OPTIMIZED_RULES.get((cfg.name, shape.name), base)
+    return base
+
+
+# §Perf hillclimb layouts (EXPERIMENTS.md documents hypothesis -> result):
+OPTIMIZED_RULES = {
+    # sequence-parallel prefill: 24 heads don't divide the model axis, so
+    # head-sharding falls back and GSPMD all-reduces every projection;
+    # sharding the sequence instead keeps projections local and turns the
+    # attention exchange into O(KV) per layer.
+    ("starcoder2-3b", "prefill_32k"): sh.Rules(
+        batch=("pod", "data"), seq=("model",), fsdp_params=False),
+    # shard_map expert path (see models/moe.py — iteration 1 with plain
+    # sharding constraints was refuted; iteration 2 forces local dispatch).
+    ("mixtral-8x22b", "train_4k"): sh.Rules(
+        batch=("pod", "data"), seq=(), fsdp_params=True,
+        moe_shard_map=True),
+    # same shard_map expert-path as mixtral; 256 experts would normally
+    # shard over the model axis, which the shard_map dispatch cannot use —
+    # shard the per-expert FFN dim instead (shard_experts=False).
+    ("deepseek-v3-671b", "train_4k"): sh.Rules(
+        batch=("pod", "data"), seq=(), fsdp_params=True,
+        moe_shard_map=True, shard_experts=False),
+    # 2D tensor-parallel serving: params sharded over (data x model) —
+    # no per-step FSDP re-gather; cache sequence sharded over both axes;
+    # batch replicated (decode is parameter/cache-bandwidth-bound).
+    ("deepseek-v3-671b", "decode_32k"): sh.Rules(
+        batch=(), seq=("data", "model"), model=("data", "model"),
+        fsdp_params=False),
+}
+
+
+def config_for(cfg: ModelConfig, shape: configs.ShapeSpec,
+               optimized: bool = False) -> ModelConfig:
+    """Per-cell model-config overrides for the optimized runs."""
+    import dataclasses as dc
+    if optimized and cfg.attn_impl == "mla" and shape.kind == "decode":
+        cfg = dc.replace(cfg, mla_absorb=True)   # absorbed-MLA decode
+    return cfg
+
+
+def token_specs(cfg: ModelConfig, shape: configs.ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        d = {"tokens": SDS((B, S), jnp.int32),
+             "labels": SDS((B, S), jnp.int32),
+             "mask": SDS((B, S), jnp.float32)}
+    elif shape.kind == "prefill":
+        d = {"tokens": SDS((B, S), jnp.int32)}
+    else:  # decode: one token against a seq_len cache
+        d = {"tokens": SDS((B, 1), jnp.int32)}
+    if cfg.vlm_patches and shape.kind != "decode":
+        d["patches"] = SDS((B, cfg.vlm_patches, cfg.d_model), jnp.float32)
+    if cfg.encoder is not None and shape.kind != "decode":
+        d["frames"] = SDS((B, cfg.encoder.n_frames, cfg.d_model), jnp.float32)
+    return d
+
+
+def batch_spec_shardings(mesh, rules, cfg, shape, batch_specs):
+    out = {}
+    for k, v in batch_specs.items():
+        if k in ("tokens", "labels", "mask"):
+            ax = ("batch", "seq") if v.shape[1] > 1 else ("batch", None)
+        elif k in ("patches", "frames"):
+            ax = ("batch", "seq", "embed")
+        else:
+            ax = (None,) * len(v.shape)
+        out[k] = jax.sharding.NamedSharding(
+            mesh, sh.spec_for_act(mesh, rules, ax, v.shape))
+    return out
+
+
+# ----------------------------------------------------------------- caches
+
+_CACHE_AXES = {
+    "k": (None, "batch", "seq", "kv_heads", None),
+    "v": (None, "batch", "seq", "kv_heads", None),
+    "xk": (None, "batch", None, "kv_heads", None),
+    "xv": (None, "batch", None, "kv_heads", None),
+    "c": (None, "batch", "seq", None),            # MLA latent
+    "state": (None, "batch", "heads", None, None),  # SSD
+    "conv": (None, "batch", None, "mlp"),
+    "h": (None, "batch", "mlp"),                  # RG-LRU
+    "pos": (None,),
+}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(
+        lambda: lm.init_caches(cfg, batch, max_seq))
+
+
+def cache_shardings(mesh, rules, cache_tree):
+    def one(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = p.key
+                break
+        ax = _CACHE_AXES.get(name, (None,) * len(leaf.shape))
+        ax = ax[: len(leaf.shape)]
+        if len(ax) < len(leaf.shape):
+            ax = ax + (None,) * (len(leaf.shape) - len(ax))
+        return jax.sharding.NamedSharding(
+            mesh, sh.spec_for_act(mesh, rules, ax, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+# -------------------------------------------------------------- opt state
+
+def opt_state_shardings(mesh, rules, opt_name, axes_tree, param_shapes,
+                        opt_shapes):
+    """Shardings for optimizer state, derived from the param logical axes."""
+    is_ax = lambda x: isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+    def pshard(ax, shp):
+        return jax.sharding.NamedSharding(
+            mesh, sh.spec_for_param(mesh, rules, ax, shp.shape))
+
+    if opt_name == "adamw":
+        m = jax.tree.map(pshard, axes_tree, param_shapes, is_leaf=is_ax)
+        return {"m": m, "v": m}
+
+    # adafactor: vr drops the last dim, vc the second-to-last
+    def fshard(ax, pshp, st):
+        if "vr" in st:
+            return {
+                "vr": jax.sharding.NamedSharding(
+                    mesh, sh.spec_for_param(mesh, rules, ax[:-1],
+                                            pshp.shape[:-1])),
+                "vc": jax.sharding.NamedSharding(
+                    mesh, sh.spec_for_param(
+                        mesh, rules, ax[:-2] + ax[-1:],
+                        pshp.shape[:-2] + pshp.shape[-1:])),
+            }
+        return {"v": jax.sharding.NamedSharding(
+            mesh, sh.spec_for_param(mesh, rules, ax, pshp.shape))}
+
+    stats = jax.tree.map(
+        fshard, axes_tree, param_shapes, opt_shapes["stats"],
+        is_leaf=is_ax)
+    return {"stats": stats}
+
+
+# ---------------------------------------------------------------- helpers
+
+def bytes_of(tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+def sharded_bytes_per_device(tree, shardings, mesh) -> int:
+    """Exact per-device bytes given shapes + NamedShardings."""
+    total = 0
+    ndev = mesh.size
+
+    def one(leaf, shd):
+        nonlocal total
+        shards = 1
+        spec = shd.spec
+        for i, s in enumerate(spec):
+            if s is None:
+                continue
+            names = s if isinstance(s, tuple) else (s,)
+            for n in names:
+                shards *= mesh.shape[n]
+        total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize // shards
+
+    jax.tree.map(one, tree, shardings)
+    return total

@@ -1,0 +1,6 @@
+from repro.models.config import LayerSpec, ModelConfig, EncoderConfig, \
+    param_count, active_param_count
+from repro.models import lm, steps, sharding
+
+__all__ = ["LayerSpec", "ModelConfig", "EncoderConfig", "param_count",
+           "active_param_count", "lm", "steps", "sharding"]

@@ -1,0 +1,432 @@
+"""Attention: GQA (full / sliding-window / prefix-causal), MLA (deepseek),
+cross-attention (whisper) — with KV caches for serving.
+
+Compute paths:
+  * "blockwise" (default): flash-style online-softmax over KV chunks in
+    pure jnp (lax.scan) — O(S) memory, used for training/prefill and in
+    the multi-pod dry-run.  Sliding-window layers iterate only the KV
+    chunks inside the window, so windowed archs get their FLOPs savings
+    in the compiled HLO (this matters for the roofline, not just speed).
+  * "naive": materialized scores, small shapes/tests only.
+  * the Pallas flash kernel (repro.kernels.flash_attention) is the
+    TPU-optimized variant of the same math, validated against this module.
+
+Decode path attends a single query over the cache buffer with a validity
+mask; windowed layers use a ring buffer of size `window` so a 500k-token
+stream costs O(window) memory (mixtral / gemma3-local / rg local attn).
+
+Caches store K *after* RoPE (absolute positions), the standard choice that
+makes ring buffers safe.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+NEG = -2.0e38
+BLOCK_Q = 512
+BLOCK_K = 512
+
+
+# ------------------------------------------------------------------ init
+
+def init_attn(cfg, key, spec):
+    d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(H * dh)
+    if cfg.attn_impl == "mla":
+        qh = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p = {
+            "wq_a": jax.random.normal(ks[0], (d, cfg.q_lora_rank), L.dt(cfg)) * s,
+            "wq_b": jax.random.normal(ks[1], (cfg.q_lora_rank, H, qh), L.dt(cfg))
+            * (1.0 / np.sqrt(cfg.q_lora_rank)),
+            "wkv_a": jax.random.normal(
+                ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), L.dt(cfg)) * s,
+            "wkv_b": jax.random.normal(
+                ks[3], (cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim),
+                L.dt(cfg)) * (1.0 / np.sqrt(cfg.kv_lora_rank)),
+            "wo": jax.random.normal(ks[4], (H, cfg.v_head_dim, d), L.dt(cfg)) * so,
+        }
+        a = {
+            "wq_a": ("embed", "lora"),
+            "wq_b": ("lora", "heads", "head_dim"),
+            "wkv_a": ("embed", "lora"),
+            "wkv_b": ("lora", "heads", "head_dim"),
+            "wo": ("heads", "head_dim", "embed"),
+        }
+    else:
+        p = {
+            "wq": jax.random.normal(ks[0], (d, H, dh), L.dt(cfg)) * s,
+            "wk": jax.random.normal(ks[1], (d, Hkv, dh), L.dt(cfg)) * s,
+            "wv": jax.random.normal(ks[2], (d, Hkv, dh), L.dt(cfg)) * s,
+            "wo": jax.random.normal(ks[3], (H, dh, d), L.dt(cfg)) * so,
+        }
+        a = {
+            "wq": ("embed", "heads", "head_dim"),
+            "wk": ("embed", "kv_heads", "head_dim"),
+            "wv": ("embed", "kv_heads", "head_dim"),
+            "wo": ("heads", "head_dim", "embed"),
+        }
+    if spec.cross_attn:
+        p["xq"] = jax.random.normal(ks[5], (d, H, dh), L.dt(cfg)) * s
+        p["xk"] = jax.random.normal(ks[6], (d, Hkv, dh), L.dt(cfg)) * s
+        p["xv"] = jax.random.normal(ks[7], (d, Hkv, dh), L.dt(cfg)) * s
+        p["xo"] = jax.random.normal(
+            jax.random.fold_in(key, 99), (H, dh, d), L.dt(cfg)) * so
+        nrm, na = L.init_norm(cfg)
+        p["xnorm"] = nrm
+        a.update({"xq": ("embed", "heads", "head_dim"),
+                  "xk": ("embed", "kv_heads", "head_dim"),
+                  "xv": ("embed", "kv_heads", "head_dim"),
+                  "xo": ("heads", "head_dim", "embed"),
+                  "xnorm": na})
+    return p, a
+
+
+# ----------------------------------------------------- blockwise attention
+
+def _gqa_scores(q, k):
+    """q: [B,Sq,H,dh], k: [B,Sk,Hkv,dh] -> [B,H,Sq,Sk] without repeating k."""
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k, preferred_element_type=jnp.float32)
+    return s.reshape(B, Hkv * g, Sq, k.shape[1])
+
+
+def _gqa_out(p_attn, v):
+    """p: [B,H,Sq,Sk], v: [B,Sk,Hkv,dh] -> [B,Sq,H,dh]."""
+    B, H, Sq, Sk = p_attn.shape
+    Hkv = v.shape[2]
+    g = H // Hkv
+    pg = p_attn.reshape(B, Hkv, g, Sq, Sk)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", pg, v.astype(p_attn.dtype),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, v.shape[3])
+
+
+def naive_attention(q, k, v, *, causal, window=None, prefix=0,
+                    q_offset=0, kv_valid=None, scale=None):
+    """Reference attention with materialized scores (tests / tiny shapes).
+
+    prefix: first `prefix` query/key positions attend bidirectionally
+    (paligemma image prefix).  q_offset: absolute position of q[0] relative
+    to k[0] (decode).  kv_valid: [B, Sk] bool mask of valid cache slots.
+    """
+    scale = scale or (1.0 / np.sqrt(q.shape[-1]))
+    s = _gqa_scores(q * scale, k)
+    Sq, Sk = s.shape[-2], s.shape[-1]
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+        if prefix:
+            m |= (kpos[None, :] < prefix) & jnp.ones((Sq, 1), bool)
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(m, s, NEG)
+    if kv_valid is not None:
+        s = jnp.where(kv_valid[:, None, None, :], s, NEG)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p_attn.astype(v.dtype), v)
+
+
+def blockwise_attention(q, k, v, *, causal=True, window=None, prefix=0,
+                        scale=None):
+    """Flash-style attention in jnp: scan over KV blocks with an online
+    softmax.  Windowed layers visit only in-window KV blocks."""
+    scale = scale or (1.0 / np.sqrt(q.shape[-1]))
+    B, S, H, dh = q.shape
+    Sk = k.shape[1]
+    dhv = v.shape[-1]
+    bq, bk = min(BLOCK_Q, S), min(BLOCK_K, Sk)
+    nq, nk = -(-S // bq), -(-Sk // bk)
+    Sp, Skp = nq * bq, nk * bk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Skp - Sk), (0, 0), (0, 0)))
+    qb = qp.reshape(B, nq, bq, H, dh).transpose(1, 0, 2, 3, 4)   # [nq,B,bq,H,dh]
+    kb = kp.reshape(B, nk, bk, k.shape[2], dh).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, bk, v.shape[2], dhv).transpose(1, 0, 2, 3, 4)
+
+    # how many kv blocks behind the diagonal a query block must visit
+    w_blocks = nk if window is None else min(nk, window // bk + 2)
+
+    def q_block(qi, qblk):
+        qpos = qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, rel):
+            m_run, l_run, acc = carry
+            if causal:
+                kj_raw = qi * bq // bk - rel
+                kj = jnp.clip(kj_raw, 0, nk - 1)
+                step_ok = kj_raw >= 0        # don't re-visit block 0
+            else:
+                kj, step_ok = rel, jnp.asarray(True)
+            kblk, vblk = kb[kj], vb[kj]
+            kpos = kj * bk + jnp.arange(bk)
+            s = _gqa_scores((qblk * scale)[:, :, :, :], kblk)   # [B,H,bq,bk]
+            msk = jnp.ones((bq, bk), bool)
+            if causal:
+                msk &= kpos[None, :] <= qpos[:, None]
+                if prefix:
+                    msk |= (kpos[None, :] < prefix) & jnp.ones((bq, 1), bool)
+            if window is not None:
+                msk &= kpos[None, :] > qpos[:, None] - window
+            msk &= (kpos < Sk)[None, :]
+            msk &= step_ok
+            s = jnp.where(msk, s, NEG)
+            m_new = jnp.maximum(m_run, jnp.max(s, -1))
+            alpha = jnp.exp(m_run - m_new)
+            p_b = jnp.exp(s - m_new[..., None])
+            l_run = l_run * alpha + jnp.sum(p_b, -1)
+            acc = acc * alpha[..., None] + _block_out(p_b, vblk)
+            return (m_new, l_run, acc), None
+
+        m0 = jnp.full((B, H, bq), NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, dhv), jnp.float32)
+        steps = w_blocks if causal else nk
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc := a0), jnp.arange(steps))
+        out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3)                         # [B,bq,H,dhv]
+
+    outs = jax.lax.map(lambda i: q_block(i, qb[i]), jnp.arange(nq))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, dhv)[:, :S]
+    return out.astype(v.dtype)
+
+
+def _block_out(p_attn, vblk):
+    """[B,H,bq,bk] x [B,bk,Hkv,dhv] -> [B,H,bq,dhv] (GQA-aware)."""
+    B, H, bq, bk = p_attn.shape
+    Hkv = vblk.shape[2]
+    g = H // Hkv
+    pg = p_attn.reshape(B, Hkv, g, bq, bk)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", pg, vblk.astype(jnp.float32))
+    return o.reshape(B, H, bq, vblk.shape[3])
+
+
+# --------------------------------------------------------------- forward
+
+def attn_forward(cfg, spec, p, x, positions, cache=None, impl="blockwise"):
+    """Self-attention.  x: [B,S,d].  cache: None (train/prefill without
+    cache), or dict(k,v,pos) for decode / prefill-with-cache.
+    Returns (out [B,S,d], new_cache)."""
+    if cfg.attn_impl == "mla":
+        return _mla_forward(cfg, spec, p, x, positions, cache, impl)
+    B, S, d = x.shape
+    H, Hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    q = L.rope(q, positions, cfg.rope_theta)
+    k = L.rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = _cache_update(cfg, spec, cache, k, v, positions)
+        if S == 1:  # decode
+            out = _decode_attend(cfg, spec, q, new_cache, positions)
+            return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+        # prefill-with-cache: attend over the raw (unwrapped) K/V; the ring
+        # buffer is only for subsequent decode steps.
+
+    if impl == "naive":
+        out = naive_attention(q, k, v, causal=True, window=spec.window,
+                              prefix=cfg.vlm_patches)
+    else:
+        out = blockwise_attention(q, k, v, causal=True, window=spec.window,
+                                  prefix=cfg.vlm_patches)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+def cross_attn_forward(cfg, p, x, enc_kv):
+    """Whisper decoder cross-attention; enc_kv = (k, v) precomputed at
+    prefill from encoder output."""
+    k, v = enc_kv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["xq"])
+    out = naive_attention(q, k, v, causal=False) if k.shape[1] <= 2048 else \
+        blockwise_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["xo"])
+
+
+def encode_cross_kv(cfg, p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["xk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["xv"])
+    return k, v
+
+
+# ------------------------------------------------------------------ cache
+
+def init_cache(cfg, spec, batch, max_seq):
+    """Preallocated decode cache for one attention layer."""
+    if cfg.attn_impl == "mla":
+        width = cfg.kv_lora_rank + cfg.qk_rope_dim
+        buf = max_seq if spec.window is None else min(spec.window, max_seq)
+        return {"c": jnp.zeros((batch, buf, width), L.dt(cfg)),
+                "pos": jnp.zeros((), jnp.int32)}
+    buf = max_seq if spec.window is None else min(spec.window, max_seq)
+    shape = (batch, buf, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, L.dt(cfg)),
+            "v": jnp.zeros(shape, L.dt(cfg)),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def _cache_update(cfg, spec, cache, k, v, positions):
+    """Write new entries at their (ring-buffered if windowed) slots.
+    When prefilling more tokens than the buffer holds, keep the last `buf`
+    (slot-duplicate scatters have unspecified winner semantics).
+    positions: [S] shared, or [B, S] per-row (ragged continuous batching)."""
+    buf = cache["k"].shape[1]
+    if k.shape[1] > buf:
+        k, v = k[:, -buf:], v[:, -buf:]
+        positions = positions[..., -buf:]
+    slots = positions % buf
+    if slots.ndim == 2:  # per-row scatter
+        b_idx = jnp.arange(k.shape[0])[:, None]
+        ck = cache["k"].at[b_idx, slots].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[b_idx, slots].set(v.astype(cache["v"].dtype))
+    else:
+        ck = cache["k"].at[:, slots].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[:, slots].set(v.astype(cache["v"].dtype))
+    return {"k": ck, "v": cv, "pos": jnp.max(positions) + 1}
+
+
+def _decode_attend(cfg, spec, q, cache, positions):
+    """Single-token attention over the cache buffer with validity mask.
+    positions: [1] shared, or [B, 1] per-row (ragged batching)."""
+    B = q.shape[0]
+    buf = cache["k"].shape[1]
+    cur = positions[..., -1]                          # [] or [B]
+    slot_pos = _slot_positions(buf, cur)              # [buf] or [B, buf]
+    curb = cur[..., None]
+    # slot_pos < 0 marks never-written ring slots (first lap)
+    valid = (slot_pos <= curb) & (slot_pos >= 0)
+    if spec.window is not None:
+        valid &= slot_pos > curb - spec.window
+    valid = jnp.broadcast_to(valid, (B, buf)) if valid.ndim == 2 \
+        else jnp.broadcast_to(valid[None], (B, buf))
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    s = _gqa_scores(q * scale, cache["k"])            # [B,H,1,buf]
+    s = jnp.where(valid[:, None, None, :], s, NEG)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(p_attn.astype(cache["v"].dtype), cache["v"])
+
+
+def _slot_positions(buf, cur):
+    """Absolute position stored in each ring slot, given next-pos = cur.
+    cur: [] or [B] -> [buf] or [B, buf]."""
+    idx = jnp.arange(buf)
+    c = cur[..., None] if getattr(cur, "ndim", 0) else cur
+    wrap = (c // buf) * buf + idx
+    return jnp.where(idx <= c % buf, wrap, wrap - buf)
+
+
+# -------------------------------------------------------------------- MLA
+
+def _mla_forward(cfg, spec, p, x, positions, cache, impl):
+    """DeepSeek-V3 multi-head latent attention.
+
+    The KV cache stores only the compressed latent c_kv (kv_lora_rank) and
+    the shared rope key (qk_rope_dim) per token — the memory win that makes
+    long-context MLA serving viable.  For compute we decompress per block
+    (naive/blockwise on decompressed K/V keeps one attention code path; the
+    absorbed-matmul trick is a TPU kernel optimization left to §Perf).
+    """
+    B, S, d = x.shape
+    H = cfg.n_heads
+    rq, rkv, rr = cfg.q_lora_rank, cfg.kv_lora_rank, cfg.qk_rope_dim
+    nope, dv = cfg.qk_nope_dim, cfg.v_head_dim
+
+    q = jnp.einsum("bsd,dr->bsr", x, p["wq_a"])
+    q = jnp.einsum("bsr,rhk->bshk", q, p["wq_b"])     # [B,S,H,nope+rr]
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = L.rope(q_rope, positions, cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], -1)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"])    # [B,S,rkv+rr]
+    c, k_rope = ckv[..., :rkv], ckv[..., rkv:]
+    k_rope = L.rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    ckv = jnp.concatenate([c, k_rope], -1)
+
+    new_cache = None
+    if cache is not None:
+        buf = cache["c"].shape[1]
+        ckv_w, pos_w = ckv, positions
+        if S > buf:
+            ckv_w, pos_w = ckv[:, -buf:], positions[..., -buf:]
+        slots = pos_w % buf
+        if slots.ndim == 2:   # per-row (ragged batching)
+            b_idx = jnp.arange(B)[:, None]
+            cc = cache["c"].at[b_idx, slots].set(
+                ckv_w.astype(cache["c"].dtype))
+        else:
+            cc = cache["c"].at[:, slots].set(ckv_w.astype(cache["c"].dtype))
+        new_cache = {"c": cc, "pos": jnp.max(positions) + 1}
+        ckv_all = cc if S == 1 else ckv   # decode reads buffer; prefill raw
+    else:
+        ckv_all = ckv
+
+    c_all, kr_all = ckv_all[..., :rkv], ckv_all[..., rkv:]
+
+    if cache is not None and S == 1:
+        cur = positions[..., -1]
+        buf = ckv_all.shape[1]
+        slot_pos = _slot_positions(buf, cur)
+        ok = (slot_pos <= cur[..., None]) & (slot_pos >= 0)
+        ok = jnp.broadcast_to(ok if ok.ndim == 2 else ok[None], (B, buf))
+        if getattr(cfg, "mla_absorb", False):
+            # Beyond-paper serving optimization (the deepseek "absorbed"
+            # trick): attend in the compressed latent space instead of
+            # decompressing the whole cache per token.
+            #   q_abs[h] = q_nope[h] @ W_kv^nope[h]^T   -> [B,H,rkv]
+            #   score    = q_abs . c  +  q_rope . k_rope
+            #   out[h]   = (attn @ c) @ W_kv^v[h]
+            # Per-step work drops from O(S*H*(nope+dv)*rkv) decompression
+            # to O(S*H*(rkv+rr)) score math.
+            w_nope = p["wkv_b"][..., :nope]              # [rkv, H, nope]
+            w_v = p["wkv_b"][..., nope:]                 # [rkv, H, dv]
+            q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_nope)
+            scale = 1.0 / np.sqrt(nope + rr)
+            s_lat = jnp.einsum("bshr,btr->bhst", q_abs, c_all,
+                               preferred_element_type=jnp.float32)
+            s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_all,
+                                preferred_element_type=jnp.float32)
+            s = (s_lat + s_rope) * scale
+            s = jnp.where(ok[:, None, None, :], s, NEG)
+            a_w = jax.nn.softmax(s, axis=-1)
+            ctx = jnp.einsum("bhst,btr->bshr", a_w.astype(c_all.dtype), c_all)
+            out = jnp.einsum("bshr,rhk->bshk", ctx, w_v)
+            return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    # decompress latents to per-head K/V (train/prefill, or naive decode)
+    kv = jnp.einsum("bsr,rhk->bshk", c_all, p["wkv_b"])
+    k = jnp.concatenate(
+        [kv[..., :nope],
+         jnp.broadcast_to(kr_all[:, :, None, :],
+                          kv.shape[:3] + (rr,))], -1)  # [B,Sk,H,nope+rr]
+    v = kv[..., nope:]
+
+    if cache is not None and S == 1:
+        cur = positions[..., -1]
+        buf = ckv_all.shape[1]
+        slot_pos = _slot_positions(buf, cur)
+        ok = (slot_pos <= cur[..., None]) & (slot_pos >= 0)
+        ok = jnp.broadcast_to(ok if ok.ndim == 2 else ok[None], (B, buf))
+        out = naive_attention(q, k, v, causal=False, kv_valid=ok,
+                              scale=1.0 / np.sqrt(nope + rr))
+    elif impl == "naive" or S <= 2048:
+        out = naive_attention(q, k, v, causal=True,
+                              scale=1.0 / np.sqrt(nope + rr))
+    else:
+        out = blockwise_attention(q, k, v, causal=True,
+                                  scale=1.0 / np.sqrt(nope + rr))
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache

@@ -1,0 +1,145 @@
+"""Shared neural-net layers (raw JAX, no framework deps).
+
+Params are plain dict pytrees.  Every ``init_*`` returns ``(params, axes)``
+where ``axes`` mirrors the params pytree with a tuple of *logical* axis
+names per array dim — consumed by models.sharding to build NamedShardings
+(with divisibility fallbacks) for the production mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ----------------------------------------------------------------- norms
+
+def init_norm(cfg, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        p = {"scale": jnp.ones((d,), jnp.float32),
+             "bias": jnp.zeros((d,), jnp.float32)}
+        a = {"scale": ("embed",), "bias": ("embed",)}
+    else:
+        p = {"scale": jnp.ones((d,), jnp.float32)}
+        a = {"scale": ("embed",)}
+    return p, a
+
+
+def norm(cfg, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-6) * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + 1e-6) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# ------------------------------------------------------------ activations
+
+def act_fn(cfg):
+    return jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+
+
+# ------------------------------------------------------------------- mlp
+
+def init_mlp(cfg, key, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(f)
+    p = {"wi": jax.random.normal(k1, (d, f), dt(cfg)) * s_in,
+         "wo": jax.random.normal(k2, (f, d), dt(cfg)) * s_out}
+    a = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}
+    if cfg.gated_mlp:
+        p["wg"] = jax.random.normal(k3, (d, f), dt(cfg)) * s_in
+        a["wg"] = ("embed", "mlp")
+    return p, a
+
+
+def mlp(cfg, p, x):
+    h = x @ p["wi"]
+    if cfg.gated_mlp:
+        h = act_fn(cfg)(x @ p["wg"]) * h
+    else:
+        h = act_fn(cfg)(h)
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------- embedding
+
+def init_embed(cfg, key):
+    v, d = cfg.padded_vocab, cfg.d_model
+    p = {"tok": jax.random.normal(key, (v, d), jnp.float32) * 0.02}
+    a = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        p["out"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (d, v), jnp.float32) * 0.02
+        a["out"] = ("embed", "vocab")
+    return p, a
+
+
+def embed(cfg, p, tokens):
+    x = jnp.take(p["tok"].astype(dt(cfg)), tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt(cfg))
+    return x
+
+
+def unembed(cfg, p, x):
+    w = p["out"] if "out" in p else p["tok"].T
+    logits = x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    return logits
+
+
+# ------------------------------------------------------------------ rope
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, dh]; positions: [..., S] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-np.arange(0, half, dtype=np.float32) / half)
+    # [..., S, 1, half]: broadcast over the head dim
+    ang = positions[..., :, None, None].astype(jnp.float32) * freq
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- conv1d
+
+def init_conv1d(key, width, channels):
+    p = {"w": jax.random.normal(key, (width, channels), jnp.float32) * 0.1,
+         "b": jnp.zeros((channels,), jnp.float32)}
+    a = {"w": (None, "mlp"), "b": ("mlp",)}
+    return p, a
+
+
+def causal_conv1d(p, x, state=None):
+    """Depthwise causal conv.  x: [B, S, C].
+    state: [B, width-1, C] trailing context (decode) or None (train).
+    Returns (y, new_state)."""
+    w = p["w"].astype(x.dtype)  # [W, C]
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+W-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(width))
+    y = y + p["b"].astype(x.dtype)
+    new_state = xp[:, -(width - 1):, :] if width > 1 else pad
+    return y, new_state

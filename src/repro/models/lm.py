@@ -1,0 +1,290 @@
+"""Model assembly: generic decoder LM covering all 10 assigned archs.
+
+Layers are stacked per (pattern, repeats) group and executed with
+lax.scan, so compiled HLO size is O(|pattern|), not O(n_layers) — critical
+for dry-run compile times at 48-61 layers on 512 host devices.  Each scan
+body is rematerialized (jax.checkpoint) for training-memory sanity.
+
+Supports: dense GQA (llama/granite/starcoder2), local:global patterns
+(gemma3), VLM prefix (paligemma, stubbed patch embeddings), enc-dec with
+cross-attention (whisper, stubbed frame embeddings), RG-LRU hybrid
+(recurrentgemma), SSD (mamba2), MoE (mixtral, deepseek incl. MLA + shared
+expert + optional MTP head).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import rglru as R
+from repro.models import ssd as S
+from repro.models.config import LayerSpec, ModelConfig
+from repro.models.sharding import constrain
+
+
+# ------------------------------------------------------------------ init
+
+def _init_layer(cfg, spec: LayerSpec, key):
+    ks = jax.random.split(key, 3)
+    p, a = {}, {}
+    p["norm_in"], a["norm_in"] = L.init_norm(cfg)
+    if spec.kind == "attn":
+        p["mix"], a["mix"] = A.init_attn(cfg, ks[0], spec)
+    elif spec.kind == "ssd":
+        p["mix"], a["mix"] = S.init_ssd(cfg, ks[0])
+    elif spec.kind == "rglru":
+        p["mix"], a["mix"] = R.init_rglru(cfg, ks[0])
+    else:
+        raise ValueError(spec.kind)
+    if spec.mlp == "dense":
+        p["norm_mlp"], a["norm_mlp"] = L.init_norm(cfg)
+        p["mlp"], a["mlp"] = L.init_mlp(cfg, ks[1])
+    elif spec.mlp == "moe":
+        p["norm_mlp"], a["norm_mlp"] = L.init_norm(cfg)
+        p["moe"], a["moe"] = M.init_moe(cfg, ks[1])
+    return p, a
+
+
+def _stack_axes(a):
+    return jax.tree.map(
+        lambda t: ("stack",) + t,
+        a,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# Side channel for the logical-axes pytree: axes are deterministic Python
+# constants assembled while init_params traces, but strings cannot be traced
+# outputs — so init_params returns params only and stashes axes here.
+_LAST_AXES: list = [None]
+
+
+def init_params(cfg: ModelConfig, key):
+    """Returns the params pytree (axes via param_axes()).  Run under
+    jax.eval_shape for allocation-free shapes in the dry-run."""
+    p, a = {}, {}
+    kk = jax.random.split(key, 8)
+    p["embed"], a["embed"] = L.init_embed(cfg, kk[0])
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        keys = jax.random.split(jax.random.fold_in(kk[1], gi), repeats)
+        gp, ga = [], []
+        for i, spec in enumerate(pattern):
+            one = lambda k, i=i, spec=spec: _init_layer(
+                cfg, spec, jax.random.fold_in(k, i))[0]
+            gp.append(jax.vmap(one)(keys))
+            _, ax = _init_layer(cfg, spec, keys[0])
+            ga.append(_stack_axes(ax))
+        p[f"g{gi}"], a[f"g{gi}"] = gp, ga
+    p["final_norm"], a["final_norm"] = L.init_norm(cfg)
+
+    if cfg.encoder is not None:
+        spec = LayerSpec(kind="attn", window=None, mlp="dense")
+        keys = jax.random.split(kk[2], cfg.encoder.n_layers)
+        one = lambda k: _init_layer(cfg, spec, k)[0]
+        p["encoder"] = {"layers": jax.vmap(one)(keys)}
+        _, ax = _init_layer(cfg, spec, keys[0])
+        a["encoder"] = {"layers": _stack_axes(ax)}
+        p["encoder"]["norm"], a["encoder"]["norm"] = L.init_norm(cfg)
+
+    if cfg.mtp:
+        spec = LayerSpec(kind="attn", window=None, mlp="dense")
+        p["mtp"] = {"proj": jax.random.normal(
+            kk[3], (2 * cfg.d_model, cfg.d_model), L.dt(cfg)) * 0.01}
+        a["mtp"] = {"proj": ("embed", "embed")}
+        p["mtp"]["block"], a["mtp"]["block"] = _init_layer(cfg, spec, kk[4])
+        p["mtp"]["norm"], a["mtp"]["norm"] = L.init_norm(cfg)
+    _LAST_AXES[0] = a
+    return p
+
+
+def param_axes(cfg: ModelConfig):
+    """Logical-axes pytree matching init_params' structure (no allocation)."""
+    jax.eval_shape(functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    return _LAST_AXES[0]
+
+
+def param_shapes(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree of the parameters (no allocation)."""
+    return jax.eval_shape(functools.partial(init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+# ------------------------------------------------------------------ block
+
+def _block(cfg, spec: LayerSpec, p, x, positions, cache, enc_out, impl):
+    h = L.norm(cfg, p["norm_in"], x)
+    if spec.kind == "attn":
+        mix, new_cache = A.attn_forward(cfg, spec, p["mix"], h, positions,
+                                        cache, impl)
+        if spec.cross_attn:
+            if enc_out is not None:
+                # train / prefill: compute cross-KV from the encoder output
+                # and (when serving) store it in the cache for decode.
+                enc_kv = A.encode_cross_kv(cfg, p["mix"], enc_out)
+            else:
+                enc_kv = (cache["xk"], cache["xv"])
+            if new_cache is not None:
+                new_cache = dict(new_cache, xk=enc_kv[0], xv=enc_kv[1])
+            xh = L.norm(cfg, p["mix"]["xnorm"], x)
+            mix = mix + A.cross_attn_forward(cfg, p["mix"], xh, enc_kv)
+    elif spec.kind == "ssd":
+        mix, new_cache = S.ssd_forward(cfg, p["mix"], h, cache)
+    else:
+        mix, new_cache = R.rglru_forward(cfg, p["mix"], h, cache)
+    # residual stream stays in cfg.dtype (attention/moe internals upcast to
+    # f32; without this cast the layer-scan carry would change dtype)
+    x = x + mix.astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    aux = jnp.zeros((), jnp.float32)
+    if spec.mlp == "dense":
+        x = x + L.mlp(cfg, p["mlp"], L.norm(cfg, p["norm_mlp"], x)).astype(x.dtype)
+    elif spec.mlp == "moe":
+        y, aux = M.moe_forward(cfg, p["moe"], L.norm(cfg, p["norm_mlp"], x))
+        x = x + y.astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+def _run_group(cfg, pattern, stacked, x, positions, caches, enc_out, impl,
+               remat=True):
+    """Scan one (pattern, repeats) group.  caches: list (per position) of
+    stacked cache pytrees or None."""
+    has_cache = caches is not None
+
+    def body(carry, xs):
+        x, aux = carry
+        ps = xs[0] if has_cache else xs
+        cs = xs[1] if has_cache else [None] * len(pattern)
+        new_cs = []
+        for i, spec in enumerate(pattern):
+            x, nc, a_i = _block(cfg, spec, ps[i], x, positions, cs[i],
+                                enc_out, impl)
+            aux = aux + a_i
+            new_cs.append(nc)
+        return (x, aux), (new_cs if has_cache else None)
+
+    if remat:
+        body = jax.checkpoint(body)
+    xs = (stacked, caches) if has_cache else stacked
+    (x, aux), new_caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), xs)
+    return x, aux, new_caches
+
+
+# ---------------------------------------------------------------- forward
+
+def encode(cfg, params, frames, impl="blockwise"):
+    """Whisper encoder over stubbed frame embeddings [B, T, d]."""
+    spec = LayerSpec(kind="attn", window=None, mlp="dense")
+    B, T, _ = frames.shape
+    positions = jnp.arange(T, dtype=jnp.int32)
+
+    def body(x, ps):
+        h = L.norm(cfg, ps["norm_in"], x)
+        q = jnp.einsum("bsd,dhk->bshk", h, ps["mix"]["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, ps["mix"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, ps["mix"]["wv"])
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        o = (A.naive_attention(q, k, v, causal=False) if T <= 2048
+             else A.blockwise_attention(q, k, v, causal=False))
+        x = x + jnp.einsum("bshk,hkd->bsd", o, ps["mix"]["wo"]).astype(x.dtype)
+        x = x + L.mlp(cfg, ps["mlp"],
+                      L.norm(cfg, ps["norm_mlp"], x)).astype(x.dtype)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), frames.astype(L.dt(cfg)),
+                        params["encoder"]["layers"])
+    return L.norm(cfg, params["encoder"]["norm"], x)
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    tokens,                   # [B, S] i32
+    positions=None,           # [S] i32 (defaults arange; decode: [1])
+    caches=None,              # from init_caches, or None
+    patches=None,             # [B, P, d] paligemma stub embeddings
+    frames=None,              # [B, T, d] whisper stub frame embeddings
+    enc_out=None,             # precomputed encoder output (decode path)
+    impl="blockwise",
+    return_hidden=False,      # also return pre-unembed hidden (MTP loss)
+):
+    """Returns (logits [B, S(+P), V], new_caches, aux_loss[, hidden])."""
+    B, Stok = tokens.shape
+    x = L.embed(cfg, params["embed"], tokens)
+    if patches is not None:
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    S_ = x.shape[1]
+    if positions is None:
+        positions = jnp.arange(S_, dtype=jnp.int32)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    if cfg.encoder is not None and enc_out is None and frames is not None:
+        enc_out = encode(cfg, params, frames, impl)
+
+    aux = jnp.zeros((), jnp.float32)
+    new_caches = {} if caches is not None else None
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        c = caches.get(f"g{gi}") if caches is not None else None
+        x, a_g, nc = _run_group(cfg, pattern, params[f"g{gi}"], x, positions,
+                                c, enc_out, impl)
+        aux = aux + a_g
+        if caches is not None:
+            new_caches[f"g{gi}"] = nc
+    x = L.norm(cfg, params["final_norm"], x)
+    logits = L.unembed(cfg, params["embed"], x)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    if return_hidden:
+        return logits, new_caches, aux, x
+    return logits, new_caches, aux
+
+
+# ------------------------------------------------------------------ cache
+
+def init_caches(cfg: ModelConfig, batch: int, max_seq: int):
+    """Stacked cache pytree aligned with the grouped layer stacks."""
+    caches = {}
+    for gi, (pattern, repeats) in enumerate(cfg.groups):
+        per_pos = []
+        for spec in pattern:
+            one = _make_cache_init(cfg, spec, batch, max_seq)
+            stacked = jax.tree.map(
+                lambda l: jnp.broadcast_to(l, (repeats,) + l.shape).copy()
+                if repeats > 1 else l[None], one)
+            per_pos.append(stacked)
+        caches[f"g{gi}"] = per_pos
+    return caches
+
+
+def _make_cache_init(cfg, spec: LayerSpec, batch, max_seq):
+    if spec.kind == "attn":
+        c = A.init_cache(cfg, spec, batch, max_seq)
+        if spec.cross_attn and cfg.encoder is not None:
+            shape = (batch, cfg.encoder.n_frames, cfg.n_kv_heads, cfg.head_dim)
+            c["xk"] = jnp.zeros(shape, L.dt(cfg))
+            c["xv"] = jnp.zeros(shape, L.dt(cfg))
+        return c
+    if spec.kind == "ssd":
+        return S.init_ssd_cache(cfg, batch)
+    return R.init_rglru_cache(cfg, batch)
+
+
+# --------------------------------------------------------------- MTP head
+
+def mtp_logits(cfg, params, h, next_embeds, positions, impl="naive"):
+    """DeepSeek-V3 multi-token prediction: predict t+2 from trunk state at
+    t combined with the embedding of token t+1."""
+    z = jnp.concatenate([h, next_embeds.astype(h.dtype)], axis=-1)
+    z = z @ params["mtp"]["proj"]
+    spec = LayerSpec(kind="attn", window=None, mlp="dense")
+    z, _, _ = _block(cfg, spec, params["mtp"]["block"], z, positions, None,
+                     None, impl)
+    z = L.norm(cfg, params["mtp"]["norm"], z)
+    return L.unembed(cfg, params["embed"], z)

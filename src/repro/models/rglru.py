@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Block: x -> (gate branch: linear+GeLU) * (recurrent branch: linear ->
+causal conv -> RG-LRU) -> out projection.
+
+RG-LRU recurrence (fp32):
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses an associative scan over (a, b) pairs (O(log S) depth);
+decode is the O(1) per-token step — with the local-attention layers'
+bounded windows this is what qualifies the arch for long_500k.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+
+_C = 8.0
+
+
+def init_rglru(cfg, key):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    s = 1.0 / np.sqrt(d)
+    p = {
+        "in_x": jax.random.normal(ks[0], (d, w), L.dt(cfg)) * s,
+        "in_gate": jax.random.normal(ks[1], (d, w), L.dt(cfg)) * s,
+        "conv": {"w": jax.random.normal(ks[2], (cfg.conv_width, w),
+                                        jnp.float32) * 0.1,
+                 "b": jnp.zeros((w,), jnp.float32)},
+        "wa": jax.random.normal(ks[3], (w, w), jnp.float32) * (1.0 / np.sqrt(w)),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "wx": jax.random.normal(ks[4], (w, w), jnp.float32) * (1.0 / np.sqrt(w)),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lam": jnp.ones((w,), jnp.float32),  # softplus(1) ~ 1.31 -> a in (0,1)
+        "out": jax.random.normal(ks[5], (w, d), L.dt(cfg)) * (1.0 / np.sqrt(w)),
+    }
+    a = {
+        "in_x": ("embed", "mlp"), "in_gate": ("embed", "mlp"),
+        "conv": {"w": (None, "mlp"), "b": ("mlp",)},
+        "wa": ("mlp", None), "ba": ("mlp",),
+        "wx": ("mlp", None), "bx": ("mlp",),
+        "lam": ("mlp",),
+        "out": ("mlp", "embed"),
+    }
+    return p, a
+
+
+def rglru_forward(cfg, p, u, cache=None):
+    """u: [B, S, d]; cache: None or dict(conv [B,W-1,w], h [B,w] f32, pos).
+    Returns (y, new_cache)."""
+    B, S, d = u.shape
+    gate = jax.nn.gelu(u @ p["in_gate"])
+    x = u @ p["in_x"]
+    conv_state = cache["conv"] if cache is not None else None
+    x, new_conv = L.causal_conv1d(p["conv"], x, conv_state)
+
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"] + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wx"] + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # [B,S,w], < 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (i * xf)
+
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, x.shape[-1]),
+                                                        jnp.float32)
+    if cache is not None and S == 1:
+        h = a[:, 0] * h0 + b[:, 0]
+        hs = h[:, None, :]
+        new_h = h
+    else:
+        # associative scan over (a, b): (a2, b2) o (a1, b1) = (a1*a2, a2*b1+b2)
+        # seed the first step with h0 by folding it into b[0].
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+        def comb(l, r_):
+            return (l[0] * r_[0], r_[0] * l[1] + r_[1])
+
+        _, hs = jax.lax.associative_scan(comb, (a, b), axis=1)
+        new_h = hs[:, -1]
+
+    y = (hs * gate.astype(jnp.float32)).astype(u.dtype) @ p["out"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"conv": new_conv, "h": new_h, "pos": cache["pos"] + S}
+    return y, new_cache
+
+
+def init_rglru_cache(cfg, batch):
+    w = cfg.lru_width or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.conv_width - 1, w), L.dt(cfg)),
+            "h": jnp.zeros((batch, w), jnp.float32),
+            "pos": jnp.zeros((), jnp.int32)}

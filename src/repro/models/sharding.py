@@ -1,0 +1,152 @@
+"""Logical-axis sharding for the production mesh.
+
+Every parameter is initialized alongside a tuple of *logical* axis names
+(models.layers/attention/moe/ssd/rglru).  This module maps logical names
+to mesh axes with divisibility-aware fallbacks:
+
+  * at most one mesh axis is consumed per tensor per mesh-axis name;
+  * a logical dim is sharded only if its size divides the mesh axis size —
+    otherwise it falls back to the next candidate dim (e.g. mixtral's 8
+    experts don't divide a 16-way model axis, so the expert FFN shards its
+    "mlp" dim instead; paligemma's 8 heads fall back to "mlp"/"vocab");
+  * optional FSDP: the largest still-unsharded dim of large tensors is
+    additionally sharded over the data axis (ZeRO-3-style), required for
+    deepseek-v3/mixtral to fit HBM;
+  * activations are constrained through `constrain(x, logical_axes)`
+    using the same rules ("batch" -> ("pod","data"), etc.).
+
+Rules are held in a module-level context installed by the launcher /
+dry-run around tracing, so model code stays framework-free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# priority order: earlier logical names grab the "model" axis first.
+# "embed" is the last-resort fallback (§Perf iteration: without it, tensors
+# whose natural dims don't divide the axis — e.g. deepseek's wo at 256-way
+# 2D TP — replicate and blow the HBM budget).
+MODEL_AXIS_PRIORITY = ("experts", "vocab", "heads", "kv_heads", "mlp",
+                       "lora", "head_dim", "embed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    batch: tuple = ("pod", "data")       # filtered by mesh axis presence
+    seq: tuple = ()                      # ("data",) enables sequence sharding
+    model: tuple = ("model",)
+    fsdp: tuple = ("data",)              # axis used for FSDP param sharding
+    fsdp_params: bool = False            # shard big params over data axis
+    fsdp_min_size: int = 1 << 20         # only tensors >= 1M elements
+    moe_constraints: bool = False        # constrain MoE dispatch tensors
+                                         # (beyond-paper §Perf optimization)
+    moe_shard_map: bool = False          # shard_map expert path: dispatch
+                                         # stays local per data shard
+    shard_experts: bool = True           # False: skip expert-dim sharding
+                                         # (shard_map path needs the full
+                                         # expert set on every device)
+
+
+DEFAULT_RULES = Rules()
+
+_CTX: dict = {"mesh": None, "rules": DEFAULT_RULES}
+
+
+def set_context(mesh: Optional[Mesh], rules: Rules = DEFAULT_RULES):
+    _CTX["mesh"], _CTX["rules"] = mesh, rules
+
+
+def get_context():
+    return _CTX["mesh"], _CTX["rules"]
+
+
+def _axes_in_mesh(mesh, names):
+    return tuple(n for n in names if n in mesh.axis_names)
+
+
+def _axis_size(mesh, names) -> int:
+    return int(np.prod([mesh.shape[n] for n in names])) if names else 1
+
+
+def spec_for_param(mesh, rules: Rules, logical_axes, shape) -> P:
+    """PartitionSpec for one parameter tensor."""
+    model_ax = _axes_in_mesh(mesh, rules.model)
+    model_sz = _axis_size(mesh, model_ax)
+    assign: dict[int, tuple] = {}
+
+    # 1) model-axis dim: first by priority that divides.  The "embed"
+    # last-resort fallback only applies to large tensors (it exists to
+    # stop multi-GB weights from replicating, not to scatter small
+    # routers/norms whose replication is free).
+    big = int(np.prod(shape)) >= (1 << 22)
+    for name in MODEL_AXIS_PRIORITY:
+        if name == "embed" and not big:
+            continue
+        if name == "experts" and not rules.shard_experts:
+            continue
+        done = False
+        for i, ax in enumerate(logical_axes):
+            if ax == name and shape[i] % model_sz == 0 and model_sz > 1:
+                assign[i] = model_ax
+                done = True
+                break
+        if done:
+            break
+
+    # 2) FSDP: largest unassigned dim over the data axis
+    if rules.fsdp_params and int(np.prod(shape)) >= rules.fsdp_min_size:
+        data_ax = _axes_in_mesh(mesh, rules.fsdp)
+        data_sz = _axis_size(mesh, data_ax)
+        if data_sz > 1:
+            cands = [i for i in range(len(shape)) if i not in assign
+                     and shape[i] % data_sz == 0]
+            if cands:
+                big = max(cands, key=lambda i: shape[i])
+                assign[big] = data_ax
+    return P(*[assign.get(i, None) for i in range(len(shape))])
+
+
+def make_param_shardings(mesh, rules: Rules, axes_tree, shapes_tree):
+    """NamedSharding pytree matching the params pytree."""
+    def one(ax, shp):
+        shape = shp.shape if hasattr(shp, "shape") else shp
+        return NamedSharding(mesh, spec_for_param(mesh, rules, ax, shape))
+    return jax.tree.map(one, axes_tree, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def spec_for_act(mesh, rules: Rules, logical_axes, shape=None) -> P:
+    out = []
+    used = set()
+    for i, name in enumerate(logical_axes):
+        if name == "batch":
+            ax = _axes_in_mesh(mesh, rules.batch)
+        elif name == "seq":
+            ax = _axes_in_mesh(mesh, rules.seq)
+        elif name in ("heads", "kv_heads", "experts", "mlp", "vocab"):
+            ax = _axes_in_mesh(mesh, rules.model)
+        else:
+            ax = ()
+        ax = tuple(a for a in ax if a not in used)
+        if ax and shape is not None and shape[i] % _axis_size(mesh, ax) != 0:
+            ax = ()
+        used |= set(ax)
+        out.append(ax if ax else None)
+    return P(*out)
+
+
+def constrain(x, logical_axes):
+    """with_sharding_constraint under the installed mesh context (no-op
+    outside a mesh context, so unit tests run untouched)."""
+    mesh, rules = get_context()
+    if mesh is None:
+        return x
+    spec = spec_for_act(mesh, rules, logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,149 @@
+"""Train / serve step factories — the functions the launcher jits and the
+dry-run lowers.
+
+train_step: causal-LM loss (+ MoE aux, + MTP for deepseek), global-norm
+clip, optimizer update, gradient-accumulation microbatching (scan) for
+compute/collective overlap.
+
+serve steps: prefill (build caches, return last logits) and decode (one
+token against the caches) — `decode_*`/`long_*` shapes lower serve_step,
+not train_step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.optim import clip_by_global_norm
+
+
+def loss_fn(cfg: ModelConfig, params, batch, impl="blockwise"):
+    tokens, labels = batch["tokens"], batch["labels"]
+    mask = batch.get("mask")
+    out = lm.forward(
+        cfg, params, tokens,
+        patches=batch.get("patches"), frames=batch.get("frames"),
+        impl=impl, return_hidden=cfg.mtp)
+    if cfg.mtp:
+        logits, _, aux, hidden = out
+    else:
+        logits, _, aux = out
+        hidden = None
+    if cfg.vlm_patches:
+        logits = logits[:, cfg.vlm_patches:]
+        if hidden is not None:
+            hidden = hidden[:, cfg.vlm_patches:]
+
+    nll = _xent(cfg, logits, labels, mask)
+    loss = nll + cfg.router_aux_coef * aux
+
+    metrics = {"nll": nll, "aux": aux}
+    if cfg.mtp and hidden is not None:
+        # predict t+2 from hidden_t + embed(token_{t+1})
+        nxt = L.embed(cfg, params["embed"], tokens[:, 1:])
+        h = hidden[:, :-1]
+        pos = jnp.arange(h.shape[1], dtype=jnp.int32)
+        mlogits = lm.mtp_logits(cfg, params, h, nxt, pos, impl="blockwise")
+        mlabels = labels[:, 1:]
+        mmask = None if mask is None else mask[:, 1:]
+        mtp_nll = _xent(cfg, mlogits, mlabels, mmask)
+        loss = loss + 0.3 * mtp_nll
+        metrics["mtp_nll"] = mtp_nll
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+def _xent(cfg, logits, labels, mask):
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig, opt_update, *, microbatches: int = 1,
+                    clip_norm: float = 1.0, impl: str = "blockwise",
+                    compress_fn=None):
+    """Returns train_step(params, opt_state, step, batch) ->
+    (params, opt_state, metrics).
+
+    microbatches > 1 accumulates gradients with lax.scan — the standard
+    overlap trick: each microbatch's reduce-scatter overlaps the next
+    microbatch's compute under XLA latency-hiding scheduling.
+    compress_fn (optional) transforms grads before the optimizer — the
+    inter-pod gradient-compression hook (repro.optim.compression).
+    """
+
+    def train_step(params, opt_state, step, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                functools.partial(loss_fn, cfg, impl=impl), has_aux=True
+            )(params, batch)
+        else:
+            def mb(carry, mbatch):
+                acc = carry
+                (_, m), g = jax.value_and_grad(
+                    functools.partial(loss_fn, cfg, impl=impl), has_aux=True
+                )(params, mbatch)
+                acc = jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g)
+                return acc, m
+
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(mb, zero, split)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+        updates, opt_state = opt_update(grads, opt_state, params, step)
+        params = jax.tree.map(lambda p, u: p + u.astype(p.dtype), params,
+                              updates)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_seq: Optional[int] = None,
+                      impl: str = "blockwise"):
+    """prefill(params, tokens, caches, patches/frames) ->
+    (last_logits [B, V], caches)."""
+
+    def prefill(params, tokens, caches, patches=None, frames=None):
+        logits, caches, _ = lm.forward(
+            cfg, params, tokens, caches=caches, patches=patches,
+            frames=frames, impl=impl)
+        return logits[:, -1], caches
+
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, impl: str = "blockwise"):
+    """decode(params, caches, token [B,1], pos []) -> (logits [B,V], caches).
+    This is `serve_step` for the decode_* / long_* shapes: one new token
+    against a KV/state cache of seq_len."""
+
+    def decode(params, caches, token, pos):
+        # pos: [] (synchronized batch) or [B] (ragged continuous batching)
+        positions = pos[..., None].astype(jnp.int32)
+        # VLM prefix offsets positions by the patch count
+        if cfg.vlm_patches:
+            positions = positions + cfg.vlm_patches
+        logits, caches, _ = lm.forward(
+            cfg, params, token, positions=positions, caches=caches, impl=impl)
+        return logits[:, -1], caches
+
+    return decode

@@ -1,0 +1,129 @@
+"""Optimizers (raw JAX): AdamW and Adafactor, with configurable state
+dtypes.  Adafactor's factored second moment is what fits deepseek-v3's
+671B-parameter optimizer state in HBM (DESIGN.md §5); AdamW is the default
+for everything else.
+
+API: make_optimizer(name, ...) -> (init_fn, update_fn)
+  init_fn(params) -> opt_state
+  update_fn(grads, opt_state, params, step) -> (updates, new_state)
+(updates are ADDED to params by the caller.)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(1.0, warmup)
+        prog = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0, 1)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw(lr_fn, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype=jnp.float32):
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+        t = jnp.asarray(step, jnp.float32) + 1.0
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+            v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+            u = -lr * ((m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+                       + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m2.astype(state_dtype), v2.astype(state_dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v}
+
+    return init, update
+
+
+def adafactor(lr_fn, decay=0.99, eps=1e-30, clip_threshold=1.0,
+              min_dim_factored: int = 128):
+    """Factored second-moment optimizer [Shazeer & Stern '18].  Tensors
+    with >= 2 dims both >= min_dim_factored store row/col statistics only
+    — O(n+m) instead of O(n*m) state."""
+
+    def _factored(p):
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_factored \
+            and p.shape[-2] >= min_dim_factored
+
+    def init(params):
+        def z(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"stats": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        lr = lr_fn(step)
+
+        def upd(g, st, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in st:
+                vr = decay * st["vr"] + (1 - decay) * jnp.mean(g2, -1)
+                vc = decay * st["vc"] + (1 - decay) * jnp.mean(g2, -2)
+                denom = jnp.maximum(jnp.mean(vr, -1, keepdims=True), eps)
+                vhat = (vr[..., None] / denom[..., None]) * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(vhat + eps)
+                new = {"vr": vr, "vc": vc}
+            else:
+                v = decay * st["v"] + (1 - decay) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                new = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), new
+
+        out = jax.tree.map(upd, grads, state["stats"], params,
+                           is_leaf=lambda x: isinstance(x, dict) and (
+                               "v" in x or "vr" in x))
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        stats = jax.tree.map(lambda o: o[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"stats": stats}
+
+    return init, update
+
+
+def make_optimizer(name: str, lr: float = 3e-4, warmup: int = 100,
+                   total: int = 10_000, **kw):
+    lr_fn = cosine_schedule(lr, warmup, total)
+    if name == "adamw":
+        return adamw(lr_fn, **kw)
+    if name == "adafactor":
+        return adafactor(lr_fn, **kw)
+    raise ValueError(name)

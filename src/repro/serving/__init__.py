@@ -1,0 +1,3 @@
+from repro.serving.batcher import ContinuousBatcher, Request
+
+__all__ = ["ContinuousBatcher", "Request"]

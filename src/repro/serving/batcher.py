@@ -1,0 +1,124 @@
+"""Continuous-batching serving loop for the LM simulation backends.
+
+The paper measures "simulation requests per second" — with LM backends
+that means batched decode throughput under a live request stream.  This
+module is the serving substrate: a fixed pool of B slots over ONE
+preallocated cache (so the jitted decode step never retraces), with
+
+  * slot-wise admission: new requests prefill into a free slot's cache
+    region while other slots keep decoding (continuous batching);
+  * per-slot position tracking and eviction on EOS/max-tokens;
+  * deterministic greedy decoding (swap in a sampler as needed).
+
+Prefill uses the single-sequence path (B=1 rows are written into the
+slot), so admission cost is O(prompt) and does not stall the pool more
+than one step.  On a real pod the same loop runs with the serve-layout
+shardings from launch/specs.py (2D TP; see EXPERIMENTS §Perf-C).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm, steps
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the batcher:
+    tokens: list = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg, params, pool_size: int = 8, max_seq: int = 256,
+                 impl: str = "naive"):
+        self.cfg, self.params = cfg, params
+        self.B, self.max_seq = pool_size, max_seq
+        self.caches = lm.init_caches(cfg, pool_size, max_seq)
+        self._decode = jax.jit(steps.make_decode_step(cfg, impl=impl))
+        self._prefill_one = jax.jit(
+            steps.make_prefill_step(cfg, impl=impl))
+        self.slots: list[Optional[Request]] = [None] * pool_size
+        self.pos = np.zeros(pool_size, np.int64)       # next position per slot
+        self.cur_tok = np.zeros((pool_size, 1), np.int32)
+        self.queue: list[Request] = []
+        self.completed: list[Request] = []
+        self.decode_steps = 0
+
+    # ---- admission ----
+    def submit(self, req: Request):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.B):
+            if self.slots[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            # single-row prefill into a fresh single-slot cache, then splice
+            one = lm.init_caches(self.cfg, 1, self.max_seq)
+            logits, one = self._prefill_one(self.params, prompt, one)
+            self.caches = _splice_slot(self.caches, one, slot)
+            self.slots[slot] = req
+            self.pos[slot] = len(req.prompt)
+            self.cur_tok[slot, 0] = int(jnp.argmax(logits[0]))
+            req.tokens.append(int(self.cur_tok[slot, 0]))
+
+    # ---- decode tick ----
+    def step(self):
+        self._admit()
+        if not any(s is not None for s in self.slots):
+            return False
+        # ragged continuous batching: per-row positions (idle slots pinned
+        # to 0; their outputs are ignored)
+        occupied = np.array([s is not None for s in self.slots])
+        posv = jnp.asarray(np.where(occupied, self.pos, 0), jnp.int32)
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(self.cur_tok), posv)
+        self.decode_steps += 1
+        nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
+        for slot, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.tokens.append(tok)
+            self.pos[slot] += 1
+            self.cur_tok[slot, 0] = tok
+            done = (len(req.tokens) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                    or self.pos[slot] >= self.max_seq - 1)
+            if done:
+                req.done_at = time.perf_counter()
+                self.completed.append(req)
+                self.slots[slot] = None
+        return True
+
+    def run(self, max_steps: int = 1000):
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and self.decode_steps < max_steps:
+            self.step()
+        return self.completed
+
+
+def _splice_slot(pool, one, slot):
+    """Write the single-row cache `one` into row `slot` of the pool cache."""
+    def sp(dst, src):
+        if dst.ndim >= 2 and src.shape[0] == dst.shape[0] \
+                and src.shape[1] == 1 and dst.shape[1] > 1:
+            # stacked leading dim [R, B, ...]
+            return dst.at[:, slot].set(src[:, 0])
+        return dst
+    return jax.tree.map(sp, pool, one)

@@ -1,0 +1,5 @@
+import os
+
+# Tests must see the real single CPU device (the 512-device override is
+# exclusively for launch/dryrun.py).
+os.environ.pop("XLA_FLAGS", None)

@@ -1,0 +1,152 @@
+"""Optimizers, gradient compression, sharding rules, data pipeline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    adafactor, adamw, clip_by_global_norm, cosine_schedule, make_optimizer,
+)
+from repro.optim.compression import (
+    compress_int8, decompress_int8, int8_roundtrip, topk_sparsify,
+)
+
+
+# ------------------------------------------------------------- optimizers
+
+def test_adamw_decreases_quadratic():
+    init, update = make_optimizer("adamw", lr=0.1, warmup=1, total=200,
+                                  weight_decay=0.0)
+    p = {"x": jnp.asarray([3.0, -2.0])}
+    st_ = init(p)
+    for i in range(150):
+        g = {"x": 2 * p["x"]}
+        u, st_ = update(g, st_, p, i)
+        p = jax.tree.map(lambda a, b: a + b, p, u)
+    assert float(jnp.abs(p["x"]).max()) < 0.15
+
+
+def test_adafactor_decreases_and_factored_state():
+    init, update = make_optimizer("adafactor", lr=0.05, warmup=1, total=300)
+    p = {"w": jnp.ones((256, 256)) * 2.0}
+    st_ = init(p)
+    assert "vr" in st_["stats"]["w"]
+    assert st_["stats"]["w"]["vr"].shape == (256,)
+    for i in range(80):
+        g = {"w": 2 * p["w"]}
+        u, st_ = update(g, st_, p, i)
+        p = jax.tree.map(lambda a, b: a + b, p, u)
+    assert float(jnp.abs(p["w"]).mean()) < 1.0
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.ones(4) * 10.0}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert np.isclose(float(gn), 20.0)
+    norm = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert np.isclose(norm, 1.0, atol=1e-5)
+
+
+def test_cosine_schedule():
+    lr = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(lr(0)) == 0.0
+    assert np.isclose(float(lr(10)), 1.0, atol=1e-6)
+    assert float(lr(110)) < 1e-6
+
+
+# ------------------------------------------------------------ compression
+
+@given(st.integers(0, 1000))
+@settings(max_examples=20, deadline=None)
+def test_int8_roundtrip_error(seed):
+    rng = np.random.RandomState(seed)
+    g = jnp.asarray(rng.randn(128).astype(np.float32))
+    q, s = compress_int8(g)
+    back = decompress_int8(q, s)
+    assert q.dtype == jnp.int8
+    # max error <= scale/2
+    assert float(jnp.abs(back - g).max()) <= float(s) / 2 + 1e-7
+
+
+def test_topk_sparsify_error_feedback():
+    g = jnp.asarray(np.arange(100, dtype=np.float32))
+    sparse, resid = topk_sparsify(g, frac=0.1)
+    assert int((sparse != 0).sum()) == 10
+    np.testing.assert_allclose(np.asarray(sparse + resid), np.asarray(g))
+
+
+def test_int8_transform_preserves_training():
+    grads = {"w": jnp.asarray(np.random.RandomState(0).randn(64, 64),
+                              jnp.float32)}
+    out = int8_roundtrip(grads)
+    rel = float(jnp.linalg.norm(out["w"] - grads["w"])
+                / jnp.linalg.norm(grads["w"]))
+    assert rel < 0.01
+
+
+# --------------------------------------------------------------- sharding
+
+def test_param_spec_fallbacks():
+    from repro.models.sharding import Rules, spec_for_param
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    # use a fake 16-way model mesh via explicit sizes by monkeypatching the
+    # divisibility path: simulate with a mesh dict-like
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    def norm(e):
+        # PartitionSpec normalizes 1-tuples to bare names
+        return e if isinstance(e, tuple) else ((e,) if e else None)
+
+    r = Rules()
+    # deepseek experts: 256 % 16 == 0 -> experts dim sharded
+    spec = spec_for_param(FakeMesh, r, ("experts", "embed", "mlp"),
+                          (256, 7168, 2048))
+    assert norm(spec[0]) == ("model",)
+    # mixtral: 8 experts don't divide -> falls through to mlp dim
+    spec = spec_for_param(FakeMesh, r, ("experts", "embed", "mlp"),
+                          (8, 6144, 16384))
+    assert spec[0] is None and norm(spec[2]) == ("model",)
+    # paligemma 8 heads -> head dim unsharded
+    spec = spec_for_param(FakeMesh, r, ("embed", "heads", "head_dim"),
+                          (2048, 8, 256))
+    assert spec[1] is None
+    # fsdp shards the largest remaining dim over data
+    r2 = Rules(fsdp_params=True, fsdp_min_size=0)
+    spec = spec_for_param(FakeMesh, r2, ("embed", "mlp"), (4096, 12800))
+    assert norm(spec[0]) == ("data",) and norm(spec[1]) == ("model",)
+
+
+def test_constrain_noop_without_mesh():
+    from repro.models.sharding import constrain, set_context
+    set_context(None)
+    x = jnp.ones((4, 4))
+    assert constrain(x, ("batch", "embed")) is x
+
+
+# -------------------------------------------------------------- data
+
+def test_data_determinism():
+    from repro.data import SyntheticTokens
+    a = SyntheticTokens(512, 4, 32, seed=5).batch_at(17)
+    b = SyntheticTokens(512, 4, 32, seed=5).batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = SyntheticTokens(512, 4, 32, seed=6).batch_at(17)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_prefetcher_order():
+    from repro.data import Prefetcher, SyntheticTokens
+    src = SyntheticTokens(64, 2, 8, seed=0)
+    pf = Prefetcher(src, start_step=3, depth=2)
+    try:
+        s0, b0 = pf.next()
+        s1, b1 = pf.next()
+        assert (s0, s1) == (3, 4)
+        np.testing.assert_array_equal(b0["tokens"], src.batch_at(3)["tokens"])
+    finally:
+        pf.close()

@@ -1,0 +1,64 @@
+"""Continuous-batching serving layer: ragged per-slot decode must equal
+independent per-sequence decoding, under staggered admission/eviction."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import lm, steps
+from repro.serving import ContinuousBatcher, Request
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = configs.get_config("llama3.2-1b", smoke=True)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def greedy_reference(cfg, params, prompt, n_new):
+    """Single-sequence greedy decode (B=1, synchronized path)."""
+    caches = lm.init_caches(cfg, 1, max_seq=64)
+    pre = steps.make_prefill_step(cfg, impl="naive")
+    dec = steps.make_decode_step(cfg, impl="naive")
+    lg, caches = pre(params, jnp.asarray(prompt, jnp.int32)[None], caches)
+    out = [int(jnp.argmax(lg[0]))]
+    pos = len(prompt)
+    for _ in range(n_new - 1):
+        tok = jnp.asarray([[out[-1]]], jnp.int32)
+        lg, caches = dec(params, caches, tok, jnp.asarray(pos))
+        out.append(int(jnp.argmax(lg[0])))
+        pos += 1
+    return out
+
+
+def test_ragged_batching_matches_reference(model):
+    cfg, params = model
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(1, cfg.vocab, size=n).astype(np.int32)
+               for n in (5, 9, 3, 7)]
+    n_new = 6
+
+    b = ContinuousBatcher(cfg, params, pool_size=2, max_seq=64, impl="naive")
+    for i, pr in enumerate(prompts):
+        b.submit(Request(uid=i, prompt=pr, max_new_tokens=n_new))
+    done = b.run(max_steps=200)
+    assert len(done) == len(prompts)
+
+    for req in done:
+        ref = greedy_reference(cfg, params, req.prompt, n_new)
+        assert req.tokens == ref, f"uid={req.uid}"
+
+
+def test_pool_reuses_slots(model):
+    cfg, params = model
+    b = ContinuousBatcher(cfg, params, pool_size=1, max_seq=64, impl="naive")
+    for i in range(3):
+        b.submit(Request(uid=i, prompt=np.array([1, 2, 3], np.int32),
+                         max_new_tokens=3))
+    done = b.run(max_steps=100)
+    assert [r.uid for r in done] == [0, 1, 2]
+    # with one slot and identical prompts, outputs must be identical
+    assert done[0].tokens == done[1].tokens == done[2].tokens
