@@ -1,0 +1,54 @@
+"""Service-layer scaling: searches/sec and superstep latency vs G.
+
+The arena's pitch is that G concurrent searches cost one device program
+per phase instead of G — so superstep latency should grow sublinearly in
+G on the jit path while the sequential reference pays the full G×.  Each
+row queues 2*G single-move searches over G slots (every slot is evicted
+and refilled once: admission, fused batching and eviction are all on the
+measured path).
+
+CSV: service_<executor>_G<g>, us per superstep, searches_per_sec=<v>
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import TreeConfig
+from repro.envs import BanditTreeEnv, BanditValueBackend
+from repro.service import SearchRequest, SearchService
+
+from benchmarks.common import csv_line
+
+
+def _one(executor: str, G: int, p: int = 8, budget: int = 8):
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    cfg = TreeConfig(X=512, F=6, D=8)
+
+    def build():
+        svc = SearchService(cfg, env, BanditValueBackend(), G=G, p=p,
+                            executor=executor)
+        for i in range(2 * G):
+            svc.submit(SearchRequest(uid=i, seed=i, budget=budget))
+        return svc
+
+    build().run()                    # warmup (jit compile)
+    svc = build()
+    t0 = time.perf_counter()
+    done = svc.run()
+    wall = time.perf_counter() - t0
+    assert len(done) == 2 * G
+    us_per_superstep = wall / max(svc.stats.supersteps, 1) * 1e6
+    csv_line(f"service_{executor}_G{G}", us_per_superstep,
+             f"searches_per_sec={len(done) / wall:.2f}")
+
+
+def run():
+    for executor in ("reference", "faithful"):
+        for G in (1, 2, 4, 8):
+            _one(executor, G)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -4,7 +4,8 @@
   fig5   (bench_throughput) system throughput + breakdown
   table1 (bench_resources)  UCT accelerator memory vs VMEM budget
   extras: fixed-point precision (paper §IV-C), selection diversity
-          (beyond-paper ablation), roofline summary (reads dry-run).
+          (beyond-paper ablation), roofline summary (reads dry-run),
+          multi-tree service scaling vs G (bench_service, beyond-paper).
 
 Every line printed is ``name,us_per_call,derived`` CSV.
 """
@@ -18,7 +19,7 @@ import time
 def main() -> None:
     from benchmarks import (
         bench_diversity, bench_fixedpoint, bench_intree, bench_resources,
-        bench_roofline, bench_throughput,
+        bench_roofline, bench_service, bench_throughput,
     )
 
     t0 = time.time()
@@ -27,6 +28,7 @@ def main() -> None:
     bench_fixedpoint.run()
     bench_intree.run()
     bench_throughput.run()
+    bench_service.run()
     bench_diversity.run()
     bench_roofline.run()
     print(f"# benchmarks completed in {time.time()-t0:.1f}s", file=sys.stderr)

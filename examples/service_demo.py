@@ -1,0 +1,52 @@
+"""Multi-tree search service demo: many users, one arena.
+
+Queues 12 search requests (mixed budgets, some multi-move) over a 4-slot
+tree arena: each superstep advances every occupied slot through one
+Selection / Insertion / Simulation / BackUp round in a single device
+program per phase, with all slots' simulation states fused into one
+backend batch.  Completed searches are evicted and the freed slot is
+immediately refilled from the queue.
+
+  PYTHONPATH=src python examples/service_demo.py
+"""
+
+import numpy as np
+
+from repro.core import TreeConfig
+from repro.envs import BanditTreeEnv, BanditValueBackend
+from repro.service import SearchRequest, SearchService
+
+
+def main():
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    cfg = TreeConfig(X=512, F=6, D=8)
+    svc = SearchService(
+        cfg, env, BanditValueBackend(),
+        G=4,                   # concurrent tree slots
+        p=16,                  # workers (simulations) per tree per superstep
+        executor="faithful",   # vmapped jit arena ("reference" = numpy oracle)
+    )
+
+    for i in range(12):
+        svc.submit(SearchRequest(
+            uid=i,
+            seed=i,
+            budget=10,                     # supersteps per move
+            moves=1 if i % 3 else 2,       # every third request plays 2 moves
+        ))
+
+    done = svc.run()
+    for r in sorted(done, key=lambda r: r.uid):
+        dist = r.visit_counts[-1]
+        print(f"req {r.uid:2d}: actions={r.actions} "
+              f"reward={sum(r.rewards):+.3f} supersteps={r.supersteps} "
+              f"last visit dist={np.asarray(dist).tolist()}")
+    s = svc.stats
+    print(f"\n{s.completed} searches in {s.supersteps} supersteps; "
+          f"fused sim batches: {s.sim_batches} "
+          f"(max {s.max_fused_rows} states/batch); "
+          f"intree={s.t_intree:.3f}s host={s.t_host:.3f}s sim={s.t_sim:.3f}s")
+
+
+if __name__ == "__main__":
+    main()

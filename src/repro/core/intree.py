@@ -39,7 +39,7 @@ import jax.numpy as jnp
 
 from repro.core import fixedpoint as fx
 from repro.core import scoring
-from repro.core.tree import NULL, TreeConfig, UCTree
+from repro.core.tree import NULL, TreeConfig, UCTree, where_trees
 
 
 @jax.tree_util.register_dataclass
@@ -393,3 +393,66 @@ def best_root_action(tree: UCTree):
     n = tree.edge_N[tree.root]
     ok = (lane < tree.num_actions[tree.root]) & (tree.child[tree.root] != NULL)
     return jnp.argmax(jnp.where(ok, n, -1)).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Arena entry points (service layer): every op vmapped over G stacked trees
+# --------------------------------------------------------------------------
+#
+# The arena (tree.init_arena / stack_trees) carries G independent searches
+# in one pytree; these wrappers run the single-tree ops above on every slot
+# in ONE device program.  `active` is a [G] bool mask: the op still executes
+# on idle slots (a uniform program, no ragged dispatch) but where_trees
+# discards their tree updates, so an idle slot's statistics are untouched
+# and its SelectionResult rows are dead data the host must ignore.
+#
+# Per-slot semantics are exactly the single-tree semantics — vmap adds a
+# batch axis without changing any per-element arithmetic — so the arena
+# inherits the reference-executor bit-compatibility of select/insert/backup
+# (asserted end-to-end in tests/test_service.py).  The Pallas kernel
+# variants are NOT vmappable (they manage their own grids); the service
+# layer gates them out.
+
+@functools.partial(jax.jit, static_argnums=(0, 3, 4))
+def select_arena(cfg: TreeConfig, arena: UCTree, active, p: int,
+                 variant: str = "faithful"):
+    """Selection for p workers on every slot.  Returns (arena', sel[G,...])."""
+    if variant == "wavefront":
+        fn = lambda t: select_batch_wavefront(cfg, t, p)
+    else:
+        fn = lambda t: select_batch(cfg, t, p, variant == "relaxed")
+    new, sel = jax.vmap(fn)(arena)
+    return where_trees(active, new, arena), sel
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def insert_arena(cfg: TreeConfig, arena: UCTree, active, sel):
+    """Node Insertion on every slot.  Returns (arena', new_nodes[G, p, Fp])."""
+    new, nodes = jax.vmap(lambda t, s: insert_batch(cfg, t, s))(arena, sel)
+    return where_trees(active, new, arena), nodes
+
+
+@jax.jit
+def finalize_arena(arena: UCTree, nodes, num_actions, terminal,
+                   prior_parent, priors_fx):
+    """finalize_expansion_batch per slot.  All inputs carry a leading [G]
+    axis; idle/short slots are NULL-padded rows (finalize is NULL-safe), so
+    no active mask is needed."""
+    return jax.vmap(finalize_expansion_batch)(
+        arena, nodes, num_actions, terminal, prior_parent, priors_fx)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 6))
+def backup_arena(cfg: TreeConfig, arena: UCTree, active, sel, sim_nodes,
+                 values_fx, alternating_signs: bool = False):
+    """BackUp on every slot ([G, p] sim nodes / values)."""
+    new = jax.vmap(
+        lambda t, s, n, v: backup_batch(cfg, t, s, n, v, alternating_signs)
+    )(arena, sel, sim_nodes, values_fx)
+    return where_trees(active, new, arena)
+
+
+@jax.jit
+def best_root_action_arena(arena: UCTree):
+    """Robust-child action for every slot.  Returns [G] i32."""
+    return jax.vmap(best_root_action)(arena)

@@ -197,6 +197,111 @@ def _sel_from_host(sel: dict):
 
 
 # --------------------------------------------------------------------------
+# Host expansion phase (shared by the single-tree driver and service/)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class HostExpansion:
+    """Result of the host half of Expansion for one tree's superstep:
+    1-step env transitions for every expanding worker, ST writes done,
+    metadata queued for finalize, and the simulation batch rows."""
+
+    sim_nodes: Any       # [p] i32 node each simulation runs from
+    sim_states: Any      # [p, ...] states for SimulationBackend.evaluate
+    fin_nodes: list      # inserted node ids (ragged)
+    fin_na: list         # their legal-action counts
+    fin_term: list       # their terminal flags
+    prior_parents: list  # parents receiving prior rows (expand-all mode)
+    prior_workers: list  # worker index whose sim state produced each prior
+
+    def finalize_args(self, Fp: int, priors) -> tuple | None:
+        """Ragged finalize arguments (single-tree driver).  Returns
+        (nodes, num_actions, terminal, prior_parent, priors_fx) or None
+        when nothing was inserted."""
+        if not self.fin_nodes:
+            return None
+        pf = pp = None
+        if priors is not None and self.prior_workers:
+            pf = encode_prior_rows(priors, self.prior_workers, Fp)
+            pp = np.asarray(self.prior_parents, np.int32)
+        return (np.asarray(self.fin_nodes, np.int32),
+                np.asarray(self.fin_na, np.int32),
+                np.asarray(self.fin_term, np.int32), pp, pf)
+
+    def padded_finalize_args(self, K: int, p: int, Fp: int, priors) -> tuple:
+        """Fixed-shape NULL-padded finalize arguments (arena driver: every
+        slot must contribute identical shapes to the vmapped finalize)."""
+        nodes = np.full(K, NULL, np.int32)
+        na = np.zeros(K, np.int32)
+        term = np.zeros(K, np.int32)
+        k = len(self.fin_nodes)
+        nodes[:k] = self.fin_nodes
+        na[:k] = self.fin_na
+        term[:k] = self.fin_term
+        pp = np.full(p, NULL, np.int32)
+        pf = np.zeros((p, Fp), np.int32)
+        if priors is not None and self.prior_workers:
+            pp[: len(self.prior_parents)] = self.prior_parents
+            pf[: len(self.prior_workers)] = encode_prior_rows(
+                priors, self.prior_workers, Fp)
+        return nodes, na, term, pp, pf
+
+
+def encode_prior_rows(priors, prior_workers, Fp: int) -> np.ndarray:
+    """Select the expand-all workers' prior rows and pad to Fp lanes
+    (Qm.16).  Priors are produced for the leaf states that expanded-all —
+    sim node == leaf for those workers."""
+    pr = np.asarray(priors)[prior_workers]
+    padded = np.zeros((len(prior_workers), Fp), np.float32)
+    padded[:, : pr.shape[1]] = pr
+    return np.asarray(fx.encode(padded), np.int32)
+
+
+def host_expand_phase(env: Environment, st: StateTable, sel: dict,
+                      new_nodes: np.ndarray) -> HostExpansion:
+    """ST reads, 1-step env transitions, ST writes (paper Alg. 2 step 3).
+
+    Sync-free by the paper's §III-B invariant: every write targets a
+    distinct freshly inserted node id.  `sel` is the host-side selection
+    dict; `new_nodes` is the [p, Fp] id block from Node Insertion."""
+    p = sel["leaves"].shape[0]
+    leaves = sel["leaves"]
+    leaf_states = st.read(leaves)
+    sim_nodes = leaves.copy()
+    sim_states = leaf_states.copy()
+    out = HostExpansion(sim_nodes, sim_states, [], [], [], [], [])
+    for j in range(p):
+        ea = int(sel["expand_action"][j])
+        if ea == NULL:
+            continue
+        if ea == -2:  # expand-all (Gomoku benchmark mode)
+            k = int(sel["n_insert"][j])
+            states, nas, terms = [], [], []
+            for a in range(k):
+                s2, _, term = env.step(leaf_states[j], a)
+                states.append(s2)
+                nas.append(0 if term else env.num_actions(s2))
+                terms.append(int(term))
+            ids = new_nodes[j, :k]
+            st.write(ids, np.stack(states))
+            out.fin_nodes += list(ids)
+            out.fin_na += nas
+            out.fin_term += terms
+            out.prior_parents.append(int(leaves[j]))
+            out.prior_workers.append(j)
+        else:
+            s2, _, term = env.step(leaf_states[j], ea)
+            nid = int(new_nodes[j, 0])
+            st.write(np.array([nid]), s2[None])
+            out.fin_nodes.append(nid)
+            out.fin_na.append(0 if term else env.num_actions(s2))
+            out.fin_term.append(int(term))
+            out.sim_nodes[j] = nid
+            out.sim_states[j] = s2
+    return out
+
+
+# --------------------------------------------------------------------------
 # Driver
 # --------------------------------------------------------------------------
 
@@ -272,64 +377,18 @@ class TreeParallelMCTS:
 
         # --- host: ST reads + 1-step sims + ST writes (sync-free) ---
         t4 = time.perf_counter()
-        leaves = sel["leaves"]
-        leaf_states = st.read(leaves)
-        sim_nodes = leaves.copy()
-        sim_states = leaf_states.copy()
-        fin_nodes, fin_na, fin_term = [], [], []
-        prior_parents, prior_workers = [], []
-        for j in range(p):
-            ea = int(sel["expand_action"][j])
-            if ea == NULL:
-                continue
-            if ea == -2:  # expand-all (Gomoku benchmark mode)
-                k = int(sel["n_insert"][j])
-                states, nas, terms = [], [], []
-                for a in range(k):
-                    s2, _, term = self.env.step(leaf_states[j], a)
-                    states.append(s2)
-                    nas.append(0 if term else self.env.num_actions(s2))
-                    terms.append(int(term))
-                ids = new_nodes[j, :k]
-                st.write(ids, np.stack(states))
-                fin_nodes += list(ids)
-                fin_na += nas
-                fin_term += terms
-                prior_parents.append(int(leaves[j]))
-                prior_workers.append(j)
-            else:
-                s2, _, term = self.env.step(leaf_states[j], ea)
-                nid = int(new_nodes[j, 0])
-                st.write(np.array([nid]), s2[None])
-                fin_nodes.append(nid)
-                fin_na.append(0 if term else self.env.num_actions(s2))
-                fin_term.append(int(term))
-                sim_nodes[j] = nid
-                sim_states[j] = s2
+        hx = host_expand_phase(self.env, st, sel, new_nodes)
+        sim_nodes = hx.sim_nodes
         t5 = time.perf_counter()
 
         # --- Simulation phase ---
-        values, priors = self.sim.evaluate(sim_states)
+        values, priors = self.sim.evaluate(hx.sim_states)
         t6 = time.perf_counter()
 
         # --- barrier; Send buffer -> accelerator; finalize + BackUp ---
-        if fin_nodes:
-            pf = None
-            if priors is not None and prior_workers:
-                # priors were produced for the leaf states that expanded-all
-                # (sim node == leaf for those workers); pad to Fp lanes.
-                pr = np.asarray(priors)[prior_workers]
-                padded = np.zeros((len(prior_workers), self.cfg.Fp), np.float32)
-                padded[:, : pr.shape[1]] = pr
-                pf = np.asarray(fx.encode(padded), np.int32)
-            self.tree = self.exec.finalize(
-                self.tree,
-                np.asarray(fin_nodes, np.int32),
-                np.asarray(fin_na, np.int32),
-                np.asarray(fin_term, np.int32),
-                np.asarray(prior_parents, np.int32) if prior_parents else None,
-                pf,
-            )
+        fin = hx.finalize_args(self.cfg.Fp, priors)
+        if fin is not None:
+            self.tree = self.exec.finalize(self.tree, *fin)
         values_fx = np.asarray(fx.encode(values), np.int32)
         dropped = None
         if fault_injector is not None:

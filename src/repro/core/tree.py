@@ -193,3 +193,47 @@ def to_numpy(tree: UCTree) -> UCTree:
 
 def to_jax(tree: UCTree) -> UCTree:
     return jax.tree.map(jnp.asarray, tree)
+
+
+# --------------------------------------------------------------------------
+# Tree arena: G independent UCTrees stacked into one pytree (service layer)
+# --------------------------------------------------------------------------
+#
+# Every leaf gains a leading [G] axis, so the whole arena is still a UCTree
+# and the batched in-tree ops of intree.py apply per slot under jax.vmap
+# (see intree.select_arena etc.).  The log table is identical across slots
+# but stacked anyway: a uniform layout keeps vmap in_axes trivial, and at
+# f32[G, 2X+4] the duplication is noise next to the edge arrays.
+
+def stack_trees(trees: list) -> UCTree:
+    """Stack G single trees into one arena pytree (leading [G] axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_arena(cfg: TreeConfig, G: int, root_num_actions: int | None = None) -> UCTree:
+    """Arena of G fresh single-root trees."""
+    one = init_tree(cfg, root_num_actions)
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), one)
+
+
+def arena_slot(arena: UCTree, g: int) -> UCTree:
+    """Extract slot g as a single UCTree view."""
+    return jax.tree.map(lambda a: a[g], arena)
+
+
+def arena_set_slot(arena: UCTree, g: int, tree: UCTree) -> UCTree:
+    """Functionally write a single tree into slot g."""
+    return jax.tree.map(lambda a, v: a.at[g].set(v), arena, tree)
+
+
+def where_trees(mask, new: UCTree, old: UCTree) -> UCTree:
+    """Per-slot select between two arenas: mask[g] picks new slot g.
+
+    Used by the arena ops to make idle slots no-ops: the vmapped op runs on
+    every slot (uniform device program) and this post-select discards the
+    updates of inactive ones.
+    """
+    def pick(a, b):
+        m = jnp.reshape(jnp.asarray(mask), mask.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree.map(pick, new, old)

@@ -1,5 +1,6 @@
-from repro.envs.bandit_tree import BanditTreeEnv
+from repro.envs.bandit_tree import BanditTreeEnv, BanditValueBackend
 from repro.envs.ponglite import PongLiteEnv
 from repro.envs.gomoku import GomokuEnv, GomokuRolloutBackend
 
-__all__ = ["BanditTreeEnv", "PongLiteEnv", "GomokuEnv", "GomokuRolloutBackend"]
+__all__ = ["BanditTreeEnv", "BanditValueBackend", "PongLiteEnv", "GomokuEnv",
+           "GomokuRolloutBackend"]

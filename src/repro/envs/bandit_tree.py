@@ -22,6 +22,23 @@ def _hash(h: int, a: int) -> int:
     return int(x & 0xFFFFFF)
 
 
+class BanditValueBackend:
+    """Deterministic per-state simulation backend.
+
+    The value is a pure function of the state's hash field, so evaluate()
+    is invariant to batch composition and ordering — exactly what the
+    service-layer equivalence tests need: a fused multi-tree batch must
+    produce the same values as per-tree batches (a shared-RNG rollout
+    backend would not, since interleaving changes its stream).
+    """
+
+    def evaluate(self, states):
+        vals = np.array(
+            [(_hash(int(s[1]), 4242) % 2000) / 1000.0 - 1.0 for s in states],
+            np.float32)
+        return vals, None
+
+
 class BanditTreeEnv:
     """State: f32[8] = [depth, hash, terminal, n_actions, 0...]."""
 

@@ -1,0 +1,17 @@
+"""Multi-tree search service: vmapped tree arena + request scheduler.
+
+See arena.py (G stacked UCTrees, one device program per phase) and
+scheduler.py (slot admission / fused simulation batching / eviction).
+"""
+
+from repro.service.arena import (
+    JaxArenaExecutor, ReferenceArenaExecutor, make_arena_executor,
+)
+from repro.service.scheduler import (
+    SearchRequest, SearchResult, SearchService, ServiceStats,
+)
+
+__all__ = [
+    "JaxArenaExecutor", "ReferenceArenaExecutor", "make_arena_executor",
+    "SearchRequest", "SearchResult", "SearchService", "ServiceStats",
+]

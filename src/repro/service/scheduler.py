@@ -1,0 +1,270 @@
+"""Search scheduler — continuous batching of MCTS requests over tree slots.
+
+Mirrors serving/batcher.py's slot pattern, one level up the stack: the
+pool is a TreeArena of G slots instead of a KV-cache pool, a request is a
+whole search (env seed + superstep budget + number of moves) instead of a
+prompt, and the decode tick is a BSP superstep advancing EVERY occupied
+slot through Selection / Insertion / host expansion / Simulation / BackUp
+together.  The Simulation phase is fused: the p simulation states of every
+active slot are concatenated into ONE SimulationBackend.evaluate call, so
+an expensive backend (NN / LM inference) always sees the largest batch the
+current load allows — the cross-request analogue of the within-tree worker
+batching the paper's Fig. 5 measures.
+
+Lifecycle of a request:
+  queued -> admitted into a free slot (fresh tree + ST, root = seed state)
+         -> superstepped until its per-move budget / node cap / saturation
+         -> move committed (robust child), then either
+              * evicted with its action trace + root visit distributions, or
+              * advanced in place: core.reroot extracts the chosen child's
+                subtree (statistics preserved) and the search continues on
+                the same slot for its next move.
+
+Determinism: with a deterministic SimulationBackend the per-slot tree
+evolution is bit-identical to a single-tree TreeParallelMCTS run of the
+same request (tests/test_service.py) — scheduling changes WHEN a tree's
+supersteps happen, never what they compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core import fixedpoint as fx
+from repro.core import reroot
+from repro.core.mcts import Environment, SimulationBackend, host_expand_phase
+from repro.core.state_table import StateTable
+from repro.core.tree import NULL, TreeConfig
+from repro.service.arena import make_arena_executor
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One user search: plan `moves` actions from the seed state, spending
+    up to `budget` supersteps of p simulations per move."""
+
+    uid: int
+    seed: int
+    budget: int = 16
+    moves: int = 1
+    keep_tree: bool = False      # attach the final tree snapshot to the result
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass
+class SearchResult:
+    uid: int
+    actions: list = dataclasses.field(default_factory=list)
+    rewards: list = dataclasses.field(default_factory=list)
+    visit_counts: list = dataclasses.field(default_factory=list)  # per move, [F]
+    supersteps: int = 0
+    terminal: bool = False
+    tree_snapshot: Optional[dict] = None
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: SearchRequest
+    res: SearchResult
+    root_state: np.ndarray
+    moves_done: int = 0
+    move_supersteps: int = 0
+    prev_size: int = 1
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    supersteps: int = 0
+    admitted: int = 0
+    completed: int = 0
+    sim_rows: int = 0            # fused simulation-batch rows evaluated
+    sim_batches: int = 0         # evaluate() calls (one per superstep)
+    max_fused_rows: int = 0
+    t_intree: float = 0.0        # select + insert + finalize + backup
+    t_host: float = 0.0          # ST / env expansion + scheduling bookkeeping
+    t_sim: float = 0.0
+
+
+class SearchService:
+    """G-slot multi-tree MCTS server (one host, one device program/phase)."""
+
+    def __init__(
+        self,
+        cfg: TreeConfig,
+        env: Environment,
+        sim: SimulationBackend,
+        G: int,
+        p: int,
+        executor: str = "faithful",
+        alternating_signs: bool = False,
+        reuse_subtree: bool = True,
+    ):
+        self.cfg, self.env, self.sim = cfg, env, sim
+        self.G, self.p = G, p
+        self.alternating_signs = alternating_signs
+        self.reuse_subtree = reuse_subtree
+        self.exec = make_arena_executor(cfg, G, executor)
+        self.sts = [StateTable(cfg.X, env.state_shape, env.state_dtype)
+                    for _ in range(G)]
+        self.slots: list[Optional[_Slot]] = [None] * G
+        self.queue: list[SearchRequest] = []
+        self.completed: list[SearchResult] = []
+        self.stats = ServiceStats()
+        # fixed per-slot finalize width (vmapped finalize needs one shape)
+        self.K = p * cfg.Fp if cfg.expand_all else p
+
+    # ---- admission ----
+    def submit(self, req: SearchRequest):
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self):
+        for g in range(self.G):
+            if self.slots[g] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            res = SearchResult(uid=req.uid, submitted_at=req.submitted_at)
+            s0 = self.env.initial_state(req.seed)
+            na = self.env.num_actions(s0)
+            if na == 0:  # degenerate: nothing to search
+                res.terminal = True
+                self._finish(res)
+                continue
+            self.exec.reset_slot(g, na)
+            self.sts[g].flush(s0)
+            self.slots[g] = _Slot(req=req, res=res, root_state=s0)
+            self.stats.admitted += 1
+
+    def _active(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots], bool)
+
+    # ---- one fused superstep over all occupied slots ----
+    def superstep(self) -> bool:
+        self._admit()
+        active = self._active()
+        if not active.any():
+            return False
+        p, cfg = self.p, self.cfg
+        t0 = time.perf_counter()
+
+        sel_dev = self.exec.selection(active, p)
+        sel = self.exec.sel_to_host(sel_dev)                  # [G, p, ...]
+        new_nodes = self.exec.insert(active, sel_dev)         # [G, p, Fp]
+        t1 = time.perf_counter()
+
+        # host expansion per slot, then ONE fused Simulation batch
+        act_idx = np.flatnonzero(active)
+        hx = {}
+        for g in act_idx:
+            slot_sel = {k: v[g] for k, v in sel.items()}
+            hx[g] = host_expand_phase(self.env, self.sts[g], slot_sel,
+                                      new_nodes[g])
+        fused = np.concatenate([hx[g].sim_states for g in act_idx])
+        t2 = time.perf_counter()
+        values, priors = self.sim.evaluate(fused)
+        t3 = time.perf_counter()
+        self.stats.sim_rows += len(fused)
+        self.stats.sim_batches += 1
+        self.stats.max_fused_rows = max(self.stats.max_fused_rows, len(fused))
+
+        # split fused results, finalize + BackUp across all slots at once
+        values_fx = np.asarray(fx.encode(np.asarray(values)), np.int32)
+        fin_nodes = np.full((self.G, self.K), NULL, np.int32)
+        fin_na = np.zeros((self.G, self.K), np.int32)
+        fin_term = np.zeros((self.G, self.K), np.int32)
+        fin_pp = np.full((self.G, p), NULL, np.int32)
+        fin_pf = np.zeros((self.G, p, cfg.Fp), np.int32)
+        sim_nodes = np.zeros((self.G, p), np.int32)
+        vals = np.zeros((self.G, p), np.int32)
+        for i, g in enumerate(act_idx):
+            row = slice(i * p, (i + 1) * p)
+            pr = priors[row] if priors is not None else None
+            (fin_nodes[g], fin_na[g], fin_term[g], fin_pp[g],
+             fin_pf[g]) = hx[g].padded_finalize_args(self.K, p, cfg.Fp, pr)
+            sim_nodes[g] = hx[g].sim_nodes
+            vals[g] = values_fx[row]
+        t4 = time.perf_counter()
+
+        self.exec.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
+        self.exec.backup(active, sel_dev, sim_nodes, vals,
+                         self.alternating_signs)
+        t5 = time.perf_counter()
+
+        self.stats.supersteps += 1
+        self.stats.t_intree += (t1 - t0) + (t5 - t4)
+        self.stats.t_host += (t2 - t1) + (t4 - t3)
+        self.stats.t_sim += t3 - t2
+
+        self._commit_moves(act_idx)
+        return True
+
+    # ---- move boundary: commit / advance / evict ----
+    def _commit_moves(self, act_idx):
+        sizes = self.exec.sizes()
+        best = None  # lazy: only computed when some slot finished its move
+        for g in act_idx:
+            slot = self.slots[g]
+            slot.move_supersteps += 1
+            slot.res.supersteps += 1
+            size = int(sizes[g])
+            done_move = (
+                slot.move_supersteps >= slot.req.budget
+                or size >= self.cfg.X
+                or size == slot.prev_size  # saturated: no node inserted
+            )
+            slot.prev_size = size
+            if not done_move:
+                continue
+            if best is None:
+                best = self.exec.best_actions()
+            self._advance(g, int(best[g]))
+
+    def _advance(self, g: int, a: int):
+        slot, env = self.slots[g], self.env
+        snap = self.exec.slot_snapshot(g)
+        root = int(snap["root"])
+        counts = np.array(snap["edge_N"][root][: self.cfg.F], np.int64)
+        new_state, reward, term = env.step(slot.root_state, a)
+        slot.res.actions.append(a)
+        slot.res.rewards.append(float(reward))
+        slot.res.visit_counts.append(counts)
+        slot.moves_done += 1
+        if term or slot.moves_done >= slot.req.moves:
+            slot.res.terminal = bool(term)
+            if slot.req.keep_tree:
+                slot.res.tree_snapshot = snap
+            self._finish(slot.res)
+            self.slots[g] = None
+            return
+        # long-lived request: next move on the same slot
+        slot.root_state = new_state
+        slot.move_supersteps = 0
+        new_root = int(snap["child"][root, a])
+        if self.reuse_subtree and new_root != NULL:
+            arrays, old2new = reroot.reroot(self.cfg, snap, new_root)
+            self.exec.write_slot(g, arrays)
+            self.sts[g].compact(old2new)
+            slot.prev_size = int(arrays["size"])
+        else:  # paper-faithful full flush
+            self.exec.reset_slot(g, max(env.num_actions(new_state), 1))
+            self.sts[g].flush(new_state)
+            slot.prev_size = 1
+
+    def _finish(self, res: SearchResult):
+        res.done_at = time.perf_counter()
+        self.completed.append(res)
+        self.stats.completed += 1
+
+    # ---- drive to completion ----
+    def run(self, max_supersteps: int = 100_000) -> list[SearchResult]:
+        while (self.queue or self._active().any()) \
+                and self.stats.supersteps < max_supersteps:
+            if not self.superstep():
+                break
+        return self.completed

@@ -47,6 +47,10 @@ class ContinuousBatcher:
         self.cfg, self.params = cfg, params
         self.B, self.max_seq = pool_size, max_seq
         self.caches = lm.init_caches(cfg, pool_size, max_seq)
+        # scratch single-slot cache for admissions, allocated once: prefill
+        # is functional (returns a fresh cache), so the zeroed scratch is
+        # never mutated and one allocation serves every admission.
+        self._scratch = lm.init_caches(cfg, 1, max_seq)
         self._decode = jax.jit(steps.make_decode_step(cfg, impl=impl))
         self._prefill_one = jax.jit(
             steps.make_prefill_step(cfg, impl=impl))
@@ -68,9 +72,9 @@ class ContinuousBatcher:
                 continue
             req = self.queue.pop(0)
             prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            # single-row prefill into a fresh single-slot cache, then splice
-            one = lm.init_caches(self.cfg, 1, self.max_seq)
-            logits, one = self._prefill_one(self.params, prompt, one)
+            # single-row prefill into the preallocated scratch cache (left
+            # untouched — prefill returns its updated copy), then splice
+            logits, one = self._prefill_one(self.params, prompt, self._scratch)
             self.caches = _splice_slot(self.caches, one, slot)
             self.slots[slot] = req
             self.pos[slot] = len(req.prompt)

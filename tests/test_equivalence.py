@@ -8,6 +8,7 @@ import dataclasses
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis
 from hypothesis import given, settings, strategies as st
 
 from repro.core import TreeConfig, TreeParallelMCTS, RolloutBackend

@@ -1,0 +1,118 @@
+"""Direct unit tests for core/reroot.py (subtree-reusing Tree Flush).
+
+reroot() was previously only exercised end-to-end through
+TreeParallelMCTS.run_step / the service move-advance; these tests pin its
+contract directly: statistics preserved under subtree extraction, the
+id-compaction map is a consistent bijection onto the surviving nodes, and
+degenerate new roots (leaf with all-NULL children) work.
+"""
+
+import numpy as np
+
+from repro.core import TreeConfig, TreeParallelMCTS
+from repro.core.reroot import reroot
+from repro.core.tree import NULL
+from repro.envs import BanditTreeEnv, BanditValueBackend
+
+CFG = TreeConfig(X=256, F=4, D=6)
+
+_STAT_KEYS = ("edge_N", "edge_W", "edge_VL", "edge_P", "node_N", "node_O",
+              "num_expanded", "num_actions", "terminal")
+
+
+def _grown_snapshot(supersteps=8, seed=5):
+    env = BanditTreeEnv(fanout=4, terminal_depth=10)
+    m = TreeParallelMCTS(CFG, env, BanditValueBackend(), p=8,
+                         executor="faithful", seed=seed)
+    for _ in range(supersteps):
+        m.superstep()
+    return m.exec.snapshot(m.tree)
+
+
+def _reachable(child, root):
+    seen, stack = {int(root)}, [int(root)]
+    while stack:
+        for c in child[stack.pop()]:
+            if c != NULL and int(c) not in seen:
+                seen.add(int(c))
+                stack.append(int(c))
+    return seen
+
+
+def test_statistics_preserved_under_subtree_extraction():
+    snap = _grown_snapshot()
+    new_root = int(snap["child"][int(snap["root"]), 1])
+    assert new_root != NULL
+    out, old2new = reroot(CFG, snap, new_root)
+
+    reach = _reachable(snap["child"], new_root)
+    assert int(out["size"]) == len(reach)
+    assert int(out["root"]) == 0 and old2new[new_root] == 0
+    for old in reach:
+        new = int(old2new[old])
+        for k in _STAT_KEYS:
+            np.testing.assert_array_equal(
+                out[k][new], snap[k][old], err_msg=f"{k} old={old}")
+    # depths re-based to the new root
+    for old in reach:
+        assert out["node_depth"][old2new[old]] == (
+            snap["node_depth"][old] - snap["node_depth"][new_root])
+    # dropped region is zeroed / NULL (capacity reclaimed)
+    n = len(reach)
+    assert (out["child"][n:] == NULL).all()
+    assert out["node_N"][n:].sum() == 0 and out["edge_N"][n:].sum() == 0
+
+
+def test_id_compaction_map_correctness():
+    snap = _grown_snapshot(seed=9)
+    new_root = int(snap["child"][int(snap["root"]), 0])
+    out, old2new = reroot(CFG, snap, new_root)
+
+    reach = _reachable(snap["child"], new_root)
+    n = len(reach)
+    # bijection: exactly the reachable set maps, onto 0..n-1 without gaps
+    mapped = np.flatnonzero(old2new != NULL)
+    assert set(mapped.tolist()) == reach
+    assert sorted(old2new[mapped].tolist()) == list(range(n))
+    # child links are remapped through the same map
+    for old in reach:
+        new = int(old2new[old])
+        for f in range(CFG.Fp):
+            c = int(snap["child"][old, f])
+            expect = NULL if c == NULL else int(old2new[c])
+            assert int(out["child"][new, f]) == expect, (old, f)
+    # dropped nodes (outside the subtree) have no image
+    dropped = set(range(int(snap["size"]))) - reach
+    assert all(old2new[o] == NULL for o in dropped)
+
+
+def test_reroot_onto_leaf_with_null_children():
+    """New root is an unexpanded frontier node: the result is a size-1
+    tree that still carries that node's own statistics."""
+    snap = _grown_snapshot(supersteps=3, seed=2)
+    size = int(snap["size"])
+    leaves = [i for i in range(size) if (snap["child"][i] == NULL).all()]
+    assert leaves
+    new_root = leaves[-1]
+    out, old2new = reroot(CFG, snap, new_root)
+    assert int(out["size"]) == 1
+    assert int(out["root"]) == 0 and old2new[new_root] == 0
+    assert (out["child"] == NULL).all()
+    for k in _STAT_KEYS:
+        np.testing.assert_array_equal(out[k][0], snap[k][new_root], err_msg=k)
+    assert out["node_depth"][0] == 0
+    assert (old2new != NULL).sum() == 1
+
+
+def test_reroot_is_idempotent_on_root():
+    """Re-rooting at the current root is a pure id-compaction no-op for a
+    BFS-ordered tree prefix: statistics and links survive unchanged."""
+    snap = _grown_snapshot(supersteps=4, seed=11)
+    out, old2new = reroot(CFG, snap, int(snap["root"]))
+    assert int(out["size"]) == int(snap["size"])
+    reach = _reachable(snap["child"], int(snap["root"]))
+    for old in reach:
+        new = int(old2new[old])
+        for k in _STAT_KEYS + ("node_depth",):
+            np.testing.assert_array_equal(out[k][new], snap[k][old],
+                                          err_msg=f"{k} old={old}")
