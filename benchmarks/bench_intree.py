@@ -2,10 +2,14 @@
 
 Paper: FPGA accelerator vs CPU master process, Pong (F=6, D=9) and Gomoku
 (F=36, D=5), p in 8..128.  Here: batched-jit accelerator (+ wavefront
-beyond-paper variant) vs the sequential CPU reference, on this container's
-single CPU core.  The simulation backend is a null stub so only in-tree
-time (Selection + Expansion tree-half + BackUp + transfers + ST) is
-measured, exactly the paper's Fig. 4 metric.
+beyond-paper variant + the arena-native Pallas kernels, interpret mode on
+this CPU-only container) vs the sequential CPU reference, on a single CPU
+core.  The simulation backend is a null stub so only in-tree time
+(Selection + Expansion tree-half + BackUp + transfers + ST) is measured,
+exactly the paper's Fig. 4 metric.  The kernel numbers measure the
+serving path's executor dispatch, not TPU silicon — interpret mode runs
+the kernel as jit'd jax ops, so treat them as a correctness-carrying
+upper bound until a real TPU run flips kernels.ops.INTERPRET.
 """
 
 from __future__ import annotations
@@ -19,15 +23,20 @@ PONG = TreeConfig(X=4096, F=6, D=9)
 GOMOKU = TreeConfig(X=4096, F=36, D=5, beta=5.0, score_fn="puct",
                     leaf_mode="unexpanded", expand_all=True)
 
+EXECUTORS = ("reference", "faithful", "wavefront", "pallas")
 
-def run(n_steps=6, ps=(8, 32, 128)):
+
+def run(n_steps=6, ps=(8, 32, 128), smoke: bool = False):
     rows = []
-    for bench, cfg, fanout, depth in (
-            ("pong", PONG, 6, 12), ("gomoku", GOMOKU, 36, 8)):
+    benches = (("pong", PONG, 6, 12), ("gomoku", GOMOKU, 36, 8))
+    if smoke:
+        n_steps, ps = 2, (4,)
+        benches = (("pong", TreeConfig(X=256, F=6, D=9), 6, 12),)
+    for bench, cfg, fanout, depth in benches:
         env = BanditTreeEnv(fanout=fanout, terminal_depth=depth)
         for p in ps:
             base = None
-            for ex in ("reference", "faithful", "wavefront"):
+            for ex in EXECUTORS:
                 stats, _ = run_supersteps(cfg, env, NullSim(), p, ex, n_steps)
                 us = stats.t_intree / stats.supersteps * 1e6
                 if ex == "reference":

@@ -1,13 +1,20 @@
-"""Service-layer scaling: searches/sec and superstep latency vs G.
+"""Service-layer scaling: searches/sec and superstep latency vs G,
+swept over executor (reference / faithful jit / arena-native pallas) and
+occupancy (full arena vs a few active slots, masked vs compacted).
 
 The arena's pitch is that G concurrent searches cost one device program
 per phase instead of G — so superstep latency should grow sublinearly in
-G on the jit path while the sequential reference pays the full G×.  Each
-row queues 2*G single-move searches over G slots (every slot is evicted
-and refilled once: admission, fused batching and eviction are all on the
-measured path).
+G on the device paths while the sequential reference pays the full G×.
+Full-occupancy rows queue 2*G single-move searches over G slots (every
+slot is evicted and refilled once: admission, fused batching and eviction
+are all on the measured path).  Low-occupancy rows queue G//4 searches
+over the same G slots and measure the same workload twice — masked
+(compact_threshold=0: idle slots execute discarded work) vs compacted
+(active slots gathered into a dense sub-arena) — which is the ROADMAP's
+idle-slot-waste item made measurable, on both the jit and kernel paths.
 
-CSV: service_<executor>_G<g>, us per superstep, searches_per_sec=<v>
+CSV: service_<executor>_G<g>_<occupancy>, us per superstep,
+     searches_per_sec=<v> (+ compaction counters on low-occupancy rows)
 """
 
 from __future__ import annotations
@@ -21,14 +28,18 @@ from repro.service import SearchRequest, SearchService
 from benchmarks.common import csv_line
 
 
-def _one(executor: str, G: int, p: int = 8, budget: int = 8):
+def _one(executor: str, G: int, p: int = 8, budget: int = 8,
+         n_req: int | None = None, compact_threshold: float = 0.0,
+         tag: str = "full", X: int = 512):
     env = BanditTreeEnv(fanout=6, terminal_depth=12)
-    cfg = TreeConfig(X=512, F=6, D=8)
+    cfg = TreeConfig(X=X, F=6, D=8)
+    n = 2 * G if n_req is None else n_req
 
     def build():
         svc = SearchService(cfg, env, BanditValueBackend(), G=G, p=p,
-                            executor=executor)
-        for i in range(2 * G):
+                            executor=executor,
+                            compact_threshold=compact_threshold)
+        for i in range(n):
             svc.submit(SearchRequest(uid=i, seed=i, budget=budget))
         return svc
 
@@ -37,16 +48,28 @@ def _one(executor: str, G: int, p: int = 8, budget: int = 8):
     t0 = time.perf_counter()
     done = svc.run()
     wall = time.perf_counter() - t0
-    assert len(done) == 2 * G
+    assert len(done) == n
     us_per_superstep = wall / max(svc.stats.supersteps, 1) * 1e6
-    csv_line(f"service_{executor}_G{G}", us_per_superstep,
-             f"searches_per_sec={len(done) / wall:.2f}")
+    derived = f"searches_per_sec={len(done) / wall:.2f}"
+    if tag != "full":
+        derived += (f" compacted={svc.stats.compacted_supersteps}"
+                    f"/{svc.stats.supersteps}")
+    csv_line(f"service_{executor}_G{G}_{tag}", us_per_superstep, derived)
 
 
-def run():
-    for executor in ("reference", "faithful"):
-        for G in (1, 2, 4, 8):
-            _one(executor, G)
+def run(smoke: bool = False):
+    executors = ("reference", "faithful", "pallas")
+    gs = (2,) if smoke else (1, 2, 4, 8)
+    p, budget, X = (4, 2, 64) if smoke else (8, 8, 512)
+    for executor in executors:
+        for G in gs:
+            _one(executor, G, p=p, budget=budget, X=X)
+    # low occupancy (G//4 active slots): masked vs compacted execution
+    G = 2 if smoke else 8
+    for executor in executors:
+        for tag, thresh in (("low_masked", 0.0), ("low_compacted", 0.5)):
+            _one(executor, G, p=p, budget=budget, X=X,
+                 n_req=max(1, G // 4), compact_threshold=thresh, tag=tag)
 
 
 if __name__ == "__main__":

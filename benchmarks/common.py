@@ -32,5 +32,19 @@ def run_supersteps(cfg, env, sim, p, executor, n, seed=0, alternating=False):
     return m.stats, wall
 
 
+# rows collected since the last drain; run.py snapshots them per bench
+# module into BENCH_<name>.json so the perf trajectory is recorded
+_RESULTS: list[dict] = []
+
+
 def csv_line(name, us_per_call, derived=""):
     print(f"{name},{us_per_call:.2f},{derived}")
+    _RESULTS.append(
+        {"name": name, "us_per_call": round(us_per_call, 2),
+         "derived": derived})
+
+
+def drain_results() -> list[dict]:
+    rows = list(_RESULTS)
+    _RESULTS.clear()
+    return rows

@@ -5,10 +5,16 @@ tree arena: each superstep advances every occupied slot through one
 Selection / Insertion / Simulation / BackUp round in a single device
 program per phase, with all slots' simulation states fused into one
 backend batch.  Completed searches are evicted and the freed slot is
-immediately refilled from the queue.
+immediately refilled from the queue; once the queue drains, occupancy
+decays and the scheduler switches from masked execution to gathering the
+active slots into a dense sub-arena (watch the per-superstep decision
+trace).
 
   PYTHONPATH=src python examples/service_demo.py
+  PYTHONPATH=src python examples/service_demo.py --executor pallas
 """
+
+import argparse
 
 import numpy as np
 
@@ -18,31 +24,51 @@ from repro.service import SearchRequest, SearchService
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--executor", choices=("faithful", "pallas"),
+                    default="faithful",
+                    help="in-tree executor: vmapped jit arena (faithful) "
+                         "or the arena-native [G]-grid Pallas kernels")
+    args = ap.parse_args()
+
     env = BanditTreeEnv(fanout=6, terminal_depth=12)
     cfg = TreeConfig(X=512, F=6, D=8)
     svc = SearchService(
         cfg, env, BanditValueBackend(),
-        G=4,                   # concurrent tree slots
-        p=16,                  # workers (simulations) per tree per superstep
-        executor="faithful",   # vmapped jit arena ("reference" = numpy oracle)
-    )
+        G=4,                     # concurrent tree slots
+        p=16,                    # workers (simulations) per tree per superstep
+        executor=args.executor,  # unified stack ("reference" = numpy oracle)
+        compact_threshold=0.5,   # opt-in: gather active slots when <= half
+    )                            # the arena is occupied (see scheduler docs)
 
     for i in range(12):
         svc.submit(SearchRequest(
             uid=i,
             seed=i,
-            budget=10,                     # supersteps per move
-            moves=1 if i % 3 else 2,       # every third request plays 2 moves
-        ))
+            budget=6 + 2 * (i % 4),        # mixed budgets: slots drain
+            moves=1 if i % 3 else 2,       # unevenly, so the tail of the
+        ))                                 # run exercises compaction
 
-    done = svc.run()
+    # drive superstep-by-superstep to trace the occupancy/compaction choice
+    while svc.superstep():
+        d = svc.last_decision
+        mode = (f"compacted -> sub-arena G={d['G_exec']}" if d["compacted"]
+                else "masked full arena")
+        print(f"superstep {svc.stats.supersteps:3d}: "
+              f"{d['A']}/{d['G']} slots active "
+              f"(occupancy {d['occupancy']:.2f}) — {mode}")
+
+    done = svc.completed
     for r in sorted(done, key=lambda r: r.uid):
         dist = r.visit_counts[-1]
         print(f"req {r.uid:2d}: actions={r.actions} "
               f"reward={sum(r.rewards):+.3f} supersteps={r.supersteps} "
               f"last visit dist={np.asarray(dist).tolist()}")
     s = svc.stats
-    print(f"\n{s.completed} searches in {s.supersteps} supersteps; "
+    print(f"\n{s.completed} searches in {s.supersteps} supersteps "
+          f"on executor={args.executor} "
+          f"({s.compacted_supersteps} compacted, "
+          f"avg occupancy {s.occupancy_sum / max(s.supersteps, 1):.2f}); "
           f"fused sim batches: {s.sim_batches} "
           f"(max {s.max_fused_rows} states/batch); "
           f"intree={s.t_intree:.3f}s host={s.t_host:.3f}s sim={s.t_sim:.3f}s")

@@ -1,13 +1,15 @@
 from repro.core.tree import TreeConfig, UCTree, init_tree, NULL
-from repro.core.mcts import (
-    TreeParallelMCTS, RolloutBackend, JaxExecutor, ReferenceExecutor,
-    make_executor,
+from repro.core.executor import (
+    InTreeExecutor, JaxExecutor, PallasExecutor, ReferenceExecutor,
+    make_intree_executor,
 )
+from repro.core.mcts import TreeParallelMCTS, RolloutBackend, make_executor
 from repro.core.state_table import StateTable
 from repro.core import fixedpoint, intree, ref_sequential, scoring
 
 __all__ = [
     "TreeConfig", "UCTree", "init_tree", "NULL", "TreeParallelMCTS",
-    "RolloutBackend", "JaxExecutor", "ReferenceExecutor", "make_executor",
+    "RolloutBackend", "InTreeExecutor", "JaxExecutor", "PallasExecutor",
+    "ReferenceExecutor", "make_executor", "make_intree_executor",
     "StateTable", "fixedpoint", "intree", "ref_sequential", "scoring",
 ]

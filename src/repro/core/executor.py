@@ -1,0 +1,367 @@
+"""Unified in-tree executor stack: one protocol, every backend, any G.
+
+Before this module the repo carried two parallel executor hierarchies:
+single-tree executors in core.mcts (stateless, tree passed in and out,
+Pallas variant included) and arena executors in service.arena (stateful
+over G stacked slots, Pallas gated out because the old kernels managed
+their own grid).  Mirsoleimani et al.'s *Structured Parallel Programming
+for MCTS* argues for exactly one execution abstraction across
+parallelization patterns — this module is that collapse:
+
+  InTreeExecutor        — the protocol.  Every implementation drives G >= 1
+                          tree slots through the device phases (Selection /
+                          Insertion / finalize / BackUp) under a [G] active
+                          mask.  TreeParallelMCTS is the G=1 client,
+                          SearchService the G>1 client; both share this
+                          dispatch instead of duplicating it.
+  ReferenceExecutor     — the paper's CPU-only master process: one
+                          sequential numpy MutableTree per slot, looped on
+                          host.  Correctness oracle and CPU baseline.
+  JaxExecutor           — stacked trees + vmapped jit ops ("faithful",
+                          "relaxed", "wavefront" variants).
+  PallasExecutor        — the arena-native [G]-grid kernels
+                          (kernels.uct_select / uct_backup): Selection and
+                          BackUp in one kernel launch per phase for all
+                          slots, insertion/finalize on the vmapped jit path
+                          (host-coupled scatters), straggler-masked backups
+                          on the jit fallback.  Bit-compatible with the
+                          reference per slot.
+
+Slot compaction: `gather_sub` extracts the active slots into a dense
+sub-executor (padded to a power of two so the jit/kernel program cache
+stays bounded) and `scatter_sub` writes the results back — the service
+scheduler uses this at low occupancy so idle slots stop costing masked
+device work (ROADMAP item).  Per-slot arithmetic is position-independent,
+so compaction never changes what a slot computes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Protocol
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import intree, ref_sequential as ref
+from repro.core.tree import (
+    NULL, TreeConfig, UCTree, arena_set_slot, arena_slot, init_arena,
+    init_tree, to_jax,
+)
+
+EXECUTOR_NAMES = ("reference", "faithful", "relaxed", "wavefront", "pallas")
+
+
+class InTreeExecutor(Protocol):
+    """The in-tree accelerator contract (paper §IV, lifted to G slots).
+
+    All array arguments follow the stacked convention: `active` is a [G]
+    bool mask, selection results / sim nodes / values carry a leading [G]
+    axis, and finalize takes the fixed-width NULL-padded per-slot rows of
+    HostExpansion.padded_finalize_args.  Inactive slots must come back
+    bit-frozen from every phase.
+    """
+
+    cfg: TreeConfig
+    G: int
+
+    def reset_slot(self, g: int, root_num_actions: int) -> None: ...
+    def selection(self, active: np.ndarray, p: int): ...
+    def insert(self, active: np.ndarray, sel) -> np.ndarray: ...
+    def finalize(self, nodes, num_actions, terminal, prior_parent,
+                 priors_fx) -> None: ...
+    def backup(self, active, sel, sim_nodes, values_fx, alternating: bool,
+               dropped=None) -> None: ...
+    def sel_to_host(self, sel) -> dict: ...
+    def best_actions(self) -> np.ndarray: ...
+    def sizes(self) -> np.ndarray: ...
+    def slot_snapshot(self, g: int) -> dict: ...
+    def write_slot(self, g: int, arrays: dict) -> None: ...
+    def block(self) -> None: ...
+    def gather_sub(self, slot_idx: np.ndarray, Gc: int) -> "InTreeExecutor": ...
+    def scatter_sub(self, sub: "InTreeExecutor", slot_idx: np.ndarray) -> None: ...
+    # single-tree compat surface (the G=1 client's `tree` property and
+    # snapshot/action helpers used throughout tests and examples)
+    def init(self, root_num_actions: int): ...
+    def get_tree(self, g: int = 0): ...
+    def set_tree(self, tree, g: int = 0) -> None: ...
+    def snapshot(self, tree) -> dict: ...
+    def best_action(self, tree) -> int: ...
+
+
+def _sel_to_host(sel) -> dict:
+    """One Receive-buffer transfer: device selection result -> host numpy."""
+    if isinstance(sel, dict):
+        return sel
+    d = {
+        "path_nodes": sel.path_nodes, "path_actions": sel.path_actions,
+        "depths": sel.depths, "leaves": sel.leaves,
+        "expand_action": sel.expand_action, "n_insert": sel.n_insert,
+        "insert_base": sel.insert_base,
+    }
+    return {k: np.asarray(v) for k, v in jax.device_get(d).items()}
+
+
+class JaxExecutor:
+    """Vmapped jit in-tree operations over G stacked trees."""
+
+    def __init__(self, cfg: TreeConfig, G: int, variant: str = "faithful",
+                 _trees: Optional[UCTree] = None):
+        if variant not in ("faithful", "relaxed", "wavefront"):
+            raise NotImplementedError(
+                f"JaxExecutor variant {variant!r}: the vmappable jit paths "
+                "are faithful/relaxed/wavefront (the arena-native Pallas "
+                "kernels are PallasExecutor / executor='pallas')")
+        self.cfg, self.G, self.variant = cfg, G, variant
+        self.trees = init_arena(cfg, G) if _trees is None else _trees
+
+    # -- device phases -------------------------------------------------
+    def selection(self, active: np.ndarray, p: int):
+        self.trees, sel = intree.select_arena(
+            self.cfg, self.trees, jnp.asarray(active), p, self.variant)
+        return sel
+
+    def insert(self, active: np.ndarray, sel):
+        self.trees, new_nodes = intree.insert_arena(
+            self.cfg, self.trees, jnp.asarray(active), sel)
+        return np.asarray(jax.device_get(new_nodes))
+
+    def finalize(self, nodes, num_actions, terminal, prior_parent, priors_fx):
+        self.trees = intree.finalize_arena(
+            self.trees, jnp.asarray(nodes), jnp.asarray(num_actions),
+            jnp.asarray(terminal), jnp.asarray(prior_parent),
+            jnp.asarray(priors_fx))
+
+    def backup(self, active, sel, sim_nodes, values_fx, alternating: bool,
+               dropped=None):
+        if dropped is not None:
+            self.trees = intree.backup_arena(
+                self.cfg, self.trees, jnp.asarray(active), sel,
+                jnp.asarray(sim_nodes), jnp.asarray(values_fx), alternating,
+                True, np.asarray(dropped))
+        else:
+            self.trees = intree.backup_arena(
+                self.cfg, self.trees, jnp.asarray(active), sel,
+                jnp.asarray(sim_nodes), jnp.asarray(values_fx), alternating)
+        jax.block_until_ready(self.trees.size)
+
+    # -- host-side slot access -----------------------------------------
+    def reset_slot(self, g: int, root_num_actions: int):
+        self.trees = arena_set_slot(
+            self.trees, g, init_tree(self.cfg, root_num_actions))
+
+    def sel_to_host(self, sel) -> dict:
+        return _sel_to_host(sel)
+
+    def best_actions(self) -> np.ndarray:
+        return np.asarray(jax.device_get(
+            intree.best_root_action_arena(self.trees)))
+
+    def sizes(self) -> np.ndarray:
+        return np.asarray(jax.device_get(self.trees.size))
+
+    def slot_snapshot(self, g: int) -> dict:
+        one = jax.device_get(arena_slot(self.trees, g))
+        return {k: np.asarray(v) for k, v in dataclasses.asdict(one).items()}
+
+    def write_slot(self, g: int, arrays: dict):
+        self.trees = arena_set_slot(self.trees, g, to_jax(UCTree(**arrays)))
+
+    def block(self):
+        jax.block_until_ready(self.trees.size)
+
+    # -- compaction (gather active slots into a dense sub-arena) -------
+    def _spawn(self, trees: UCTree, Gc: int) -> "JaxExecutor":
+        return JaxExecutor(self.cfg, Gc, self.variant, _trees=trees)
+
+    def gather_sub(self, slot_idx: np.ndarray, Gc: int) -> "JaxExecutor":
+        idx = np.asarray(slot_idx, np.int32)
+        pad = np.full(Gc - len(idx), idx[0], np.int32)  # masked-off filler
+        gidx = jnp.asarray(np.concatenate([idx, pad]))
+        return self._spawn(jax.tree.map(lambda a: a[gidx], self.trees), Gc)
+
+    def scatter_sub(self, sub: "JaxExecutor", slot_idx: np.ndarray):
+        idx = jnp.asarray(np.asarray(slot_idx, np.int32))
+        a = len(slot_idx)
+        self.trees = jax.tree.map(
+            lambda full, s: full.at[idx].set(s[:a]), self.trees, sub.trees)
+
+    # -- single-tree compat surface (G=1 driver / tests) ---------------
+    def init(self, root_num_actions: int) -> UCTree:
+        return init_tree(self.cfg, root_num_actions)
+
+    def get_tree(self, g: int = 0) -> UCTree:
+        return arena_slot(self.trees, g)
+
+    def set_tree(self, tree: UCTree, g: int = 0):
+        self.trees = arena_set_slot(self.trees, g, to_jax(tree))
+
+    def snapshot(self, tree) -> dict:
+        return {k: np.asarray(v) for k, v in dataclasses.asdict(
+            jax.device_get(tree)).items()}
+
+    def best_action(self, tree) -> int:
+        return int(intree.best_root_action(tree))
+
+
+class PallasExecutor(JaxExecutor):
+    """Arena-native Pallas kernels behind the same executor contract.
+
+    Selection and BackUp run as ONE [G]-grid kernel launch each (per-slot
+    VMEM blocks, scalar-prefetched root/size/active, idle slots no-op in
+    the kernel).  Insertion and finalize stay on the vmapped jit path —
+    they are host-coupled scatters, not the SRAM-resident hot loop the
+    paper accelerates.  Straggler-masked backups (fault policy) fall back
+    to the jit masked path; the kernel covers the fault-free superstep.
+    """
+
+    def __init__(self, cfg: TreeConfig, G: int,
+                 _trees: Optional[UCTree] = None):
+        super().__init__(cfg, G, "faithful", _trees=_trees)
+        from repro.kernels import ops as kops  # lazy: keeps core import-light
+        self._kops = kops
+
+    def selection(self, active: np.ndarray, p: int):
+        self.trees, sel = self._kops.select_arena(
+            self.cfg, self.trees, jnp.asarray(active), p)
+        return sel
+
+    def backup(self, active, sel, sim_nodes, values_fx, alternating: bool,
+               dropped=None):
+        if dropped is not None:
+            return super().backup(active, sel, sim_nodes, values_fx,
+                                  alternating, dropped)
+        self.trees = self._kops.backup_arena(
+            self.cfg, self.trees, jnp.asarray(active), sel,
+            jnp.asarray(sim_nodes), jnp.asarray(values_fx), alternating)
+        jax.block_until_ready(self.trees.size)
+
+    def _spawn(self, trees: UCTree, Gc: int) -> "PallasExecutor":
+        return PallasExecutor(self.cfg, Gc, _trees=trees)
+
+
+class ReferenceExecutor:
+    """The paper's CPU-only master process: one sequential numpy
+    MutableTree per slot, looped on host.
+
+    Same interface and same stacked [G, ...] host-array convention as the
+    device executors so every client is executor-agnostic; inactive slots
+    produce zero rows the driver never reads.
+    """
+
+    def __init__(self, cfg: TreeConfig, G: int, _trees: Optional[list] = None):
+        self.cfg, self.G = cfg, G
+        self.trees = (
+            [ref.MutableTree.from_tree(init_tree(cfg, xp=np))
+             for _ in range(G)] if _trees is None else _trees)
+
+    # -- phases --------------------------------------------------------
+    def selection(self, active: np.ndarray, p: int) -> dict:
+        cfg = self.cfg
+        out = {
+            "path_nodes": np.full((self.G, p, cfg.D), NULL, np.int32),
+            "path_actions": np.full((self.G, p, cfg.D), NULL, np.int32),
+            "depths": np.zeros((self.G, p), np.int32),
+            "leaves": np.zeros((self.G, p), np.int32),
+            "expand_action": np.full((self.G, p), NULL, np.int32),
+            "n_insert": np.zeros((self.G, p), np.int32),
+            "insert_base": np.zeros((self.G, p), np.int32),
+        }
+        for g in np.flatnonzero(active):
+            t = self.trees[g]
+            sel = ref.selection_phase(cfg, t, p)
+            ni = sel["n_insert"]
+            sel["insert_base"] = t.size + np.cumsum(ni) - ni
+            for k, v in sel.items():
+                out[k][g] = v
+        return out
+
+    def insert(self, active: np.ndarray, sel: dict) -> np.ndarray:
+        p = sel["leaves"].shape[1]
+        new_nodes = np.full((self.G, p, self.cfg.Fp), NULL, np.int32)
+        for g in np.flatnonzero(active):
+            slot_sel = {k: v[g] for k, v in sel.items()}
+            new_nodes[g] = ref.insert_phase(self.cfg, self.trees[g], slot_sel)
+        return new_nodes
+
+    def finalize(self, nodes, num_actions, terminal, prior_parent, priors_fx):
+        for g in range(self.G):
+            ref.finalize_expansion(
+                self.trees[g], nodes[g], num_actions[g], terminal[g],
+                prior_parent[g], priors_fx[g])
+
+    def backup(self, active, sel, sim_nodes, values_fx, alternating: bool,
+               dropped=None):
+        for g in np.flatnonzero(active):
+            slot_sel = {k: v[g] for k, v in sel.items()}
+            ref.backup_phase(self.cfg, self.trees[g], slot_sel,
+                             sim_nodes[g], values_fx[g], alternating,
+                             None if dropped is None else dropped[g])
+
+    # -- host-side slot access -----------------------------------------
+    def reset_slot(self, g: int, root_num_actions: int):
+        self.trees[g] = ref.MutableTree.from_tree(
+            init_tree(self.cfg, root_num_actions, xp=np))
+
+    def sel_to_host(self, sel) -> dict:
+        return sel
+
+    def best_actions(self) -> np.ndarray:
+        return np.array([ref.best_root_action(self.cfg, t)
+                         for t in self.trees], np.int32)
+
+    def sizes(self) -> np.ndarray:
+        return np.array([t.size for t in self.trees], np.int32)
+
+    def slot_snapshot(self, g: int) -> dict:
+        return {k: np.asarray(v) for k, v in
+                dataclasses.asdict(self.trees[g].to_tree()).items()}
+
+    def write_slot(self, g: int, arrays: dict):
+        self.trees[g] = ref.MutableTree.from_tree(UCTree(**arrays))
+
+    def block(self):
+        pass
+
+    # -- compaction -----------------------------------------------------
+    # MutableTrees mutate in place, so the sub-executor shares the slot
+    # objects and scatter is a re-link; compaction is a no-op cost-wise on
+    # the host oracle but keeps the scheduler executor-agnostic.
+    def gather_sub(self, slot_idx: np.ndarray, Gc: int) -> "ReferenceExecutor":
+        idx = list(np.asarray(slot_idx))
+        shared = [self.trees[g] for g in idx]
+        shared += [self.trees[idx[0]]] * (Gc - len(idx))  # masked-off filler
+        return ReferenceExecutor(self.cfg, Gc, _trees=shared)
+
+    def scatter_sub(self, sub: "ReferenceExecutor", slot_idx: np.ndarray):
+        for i, g in enumerate(np.asarray(slot_idx)):
+            self.trees[g] = sub.trees[i]
+
+    # -- single-tree compat surface ------------------------------------
+    def init(self, root_num_actions: int):
+        return ref.MutableTree.from_tree(
+            init_tree(self.cfg, root_num_actions, xp=np))
+
+    def get_tree(self, g: int = 0):
+        return self.trees[g]
+
+    def set_tree(self, tree, g: int = 0):
+        self.trees[g] = (tree if isinstance(tree, ref.MutableTree)
+                         else ref.MutableTree.from_tree(tree))
+
+    def snapshot(self, tree) -> dict:
+        return {k: np.asarray(v) for k, v in
+                dataclasses.asdict(tree.to_tree()).items()}
+
+    def best_action(self, tree) -> int:
+        return ref.best_root_action(self.cfg, tree)
+
+
+def make_intree_executor(cfg: TreeConfig, G: int, name: str) -> InTreeExecutor:
+    """Executor factory shared by TreeParallelMCTS (G=1) and SearchService."""
+    if name == "reference":
+        return ReferenceExecutor(cfg, G)
+    if name == "pallas":
+        return PallasExecutor(cfg, G)
+    return JaxExecutor(cfg, G, name)

@@ -409,9 +409,9 @@ def best_root_action(tree: UCTree):
 # Per-slot semantics are exactly the single-tree semantics — vmap adds a
 # batch axis without changing any per-element arithmetic — so the arena
 # inherits the reference-executor bit-compatibility of select/insert/backup
-# (asserted end-to-end in tests/test_service.py).  The Pallas kernel
-# variants are NOT vmappable (they manage their own grids); the service
-# layer gates them out.
+# (asserted end-to-end in tests/test_service.py).  The Pallas kernels have
+# their own arena entry points (kernels.ops.select_arena/backup_arena, a
+# [G]-grid launch instead of vmap) behind the same executor contract.
 
 @functools.partial(jax.jit, static_argnums=(0, 3, 4))
 def select_arena(cfg: TreeConfig, arena: UCTree, active, p: int,
@@ -442,13 +442,22 @@ def finalize_arena(arena: UCTree, nodes, num_actions, terminal,
         arena, nodes, num_actions, terminal, prior_parent, priors_fx)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 6))
+@functools.partial(jax.jit, static_argnums=(0, 6, 7))
 def backup_arena(cfg: TreeConfig, arena: UCTree, active, sel, sim_nodes,
-                 values_fx, alternating_signs: bool = False):
-    """BackUp on every slot ([G, p] sim nodes / values)."""
-    new = jax.vmap(
-        lambda t, s, n, v: backup_batch(cfg, t, s, n, v, alternating_signs)
-    )(arena, sel, sim_nodes, values_fx)
+                 values_fx, alternating_signs: bool = False,
+                 with_mask: bool = False, dropped=None):
+    """BackUp on every slot ([G, p] sim nodes / values).  With
+    `with_mask`, `dropped` is a [G, p] straggler mask: dropped workers get
+    the VL-recovery-only backup of backup_batch."""
+    if with_mask:
+        new = jax.vmap(
+            lambda t, s, n, v, d: backup_batch(
+                cfg, t, s, n, v, alternating_signs, True, d)
+        )(arena, sel, sim_nodes, values_fx, jnp.asarray(dropped))
+    else:
+        new = jax.vmap(
+            lambda t, s, n, v: backup_batch(cfg, t, s, n, v, alternating_signs)
+        )(arena, sel, sim_nodes, values_fx)
     return where_trees(active, new, arena)
 
 

@@ -10,9 +10,12 @@ One superstep =
 
 The driver is executor-agnostic: the in-tree operations run on the
 sequential numpy reference (the paper's CPU-only baseline), the batched
-jit ops, the Pallas kernels, or the beyond-paper wavefront variant —
-selected by name.  All executors are bit-compatible with the reference
-except "wavefront"/"relaxed" (documented intra-superstep semantics change).
+jit ops, the arena-native Pallas kernels, or the beyond-paper wavefront
+variant — selected by name through the unified executor stack
+(core.executor), of which this driver is the G=1 client (the service
+scheduler is the G>1 client of the very same dispatch).  All executors
+are bit-compatible with the reference except "wavefront"/"relaxed"
+(documented intra-superstep semantics change).
 
 Phase wall-times are recorded per superstep so the benchmark harness can
 reproduce the paper's Fig. 4 (in-tree latency) and Fig. 5 (system
@@ -23,15 +26,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Protocol
+from typing import Any, Protocol
 
-import jax
 import numpy as np
 
 from repro.core import fixedpoint as fx
-from repro.core import intree, ref_sequential as ref
+from repro.core.executor import (
+    InTreeExecutor, ReferenceExecutor, make_intree_executor,
+)
 from repro.core.state_table import StateTable
-from repro.core.tree import NULL, TreeConfig, UCTree, init_tree
+from repro.core.tree import NULL, TreeConfig, UCTree
 
 
 # --------------------------------------------------------------------------
@@ -85,115 +89,13 @@ class RolloutBackend:
 
 
 # --------------------------------------------------------------------------
-# In-tree executors
+# In-tree executors — the unified stack lives in core.executor; re-exported
+# here for the long-standing import surface (repro.core.make_executor etc.)
 # --------------------------------------------------------------------------
 
-class JaxExecutor:
-    """Batched jit / Pallas / wavefront in-tree operations on device."""
-
-    def __init__(self, cfg: TreeConfig, variant: str = "faithful"):
-        assert variant in ("faithful", "relaxed", "wavefront", "pallas")
-        self.cfg, self.variant = cfg, variant
-        if variant == "pallas":
-            from repro.kernels import ops as kops  # lazy: keeps core import-light
-            self._kops = kops
-
-    def init(self, root_num_actions: int) -> UCTree:
-        return init_tree(self.cfg, root_num_actions)
-
-    def selection(self, tree: UCTree, p: int):
-        if self.variant == "wavefront":
-            return intree.select_batch_wavefront(self.cfg, tree, p)
-        if self.variant == "pallas":
-            return self._kops.select_batch(self.cfg, tree, p)
-        return intree.select_batch(self.cfg, tree, p, self.variant == "relaxed")
-
-    def insert(self, tree, sel):
-        return intree.insert_batch(self.cfg, tree, sel)
-
-    def finalize(self, tree, nodes, num_actions, terminal, prior_parent=None, priors_fx=None):
-        return intree.finalize_expansion_batch(
-            tree, nodes, num_actions, terminal, prior_parent, priors_fx)
-
-    def backup(self, tree, sel, sim_nodes, values_fx, alternating,
-               dropped=None):
-        if dropped is not None:
-            # masked (straggler) backups run on the batched jit path; the
-            # Pallas kernel covers the hot fault-free superstep
-            return intree.backup_batch(
-                self.cfg, tree, sel, sim_nodes, values_fx, alternating,
-                True, np.asarray(dropped))
-        if self.variant == "pallas":
-            return self._kops.backup_batch(
-                self.cfg, tree, sel, sim_nodes, values_fx, alternating)
-        return intree.backup_batch(self.cfg, tree, sel, sim_nodes, values_fx, alternating)
-
-    def best_action(self, tree) -> int:
-        return int(intree.best_root_action(tree))
-
-    def snapshot(self, tree) -> dict:
-        return {k: np.asarray(v) for k, v in dataclasses.asdict(tree).items()}
-
-
-class ReferenceExecutor:
-    """The paper's CPU-only master process (sequential numpy)."""
-
-    def __init__(self, cfg: TreeConfig):
-        self.cfg = cfg
-
-    def init(self, root_num_actions: int):
-        return ref.MutableTree.from_tree(init_tree(self.cfg, root_num_actions, xp=np))
-
-    def selection(self, tree, p: int):
-        sel = ref.selection_phase(self.cfg, tree, p)
-        ni = sel["n_insert"]
-        sel["insert_base"] = tree.size + np.cumsum(ni) - ni
-        return tree, sel
-
-    def insert(self, tree, sel):
-        return tree, ref.insert_phase(self.cfg, tree, sel)
-
-    def finalize(self, tree, nodes, num_actions, terminal, prior_parent=None, priors_fx=None):
-        ref.finalize_expansion(tree, nodes, num_actions, terminal, prior_parent, priors_fx)
-        return tree
-
-    def backup(self, tree, sel, sim_nodes, values_fx, alternating,
-               dropped=None):
-        ref.backup_phase(self.cfg, tree, sel, sim_nodes, values_fx,
-                         alternating, dropped)
-        return tree
-
-    def best_action(self, tree) -> int:
-        return ref.best_root_action(self.cfg, tree)
-
-    def snapshot(self, tree) -> dict:
-        return {k: np.asarray(v) for k, v in dataclasses.asdict(tree.to_tree()).items()}
-
-
-def make_executor(cfg: TreeConfig, name: str):
-    if name == "reference":
-        return ReferenceExecutor(cfg)
-    return JaxExecutor(cfg, name)
-
-
-def _sel_to_host(sel) -> dict:
-    """One Receive-buffer transfer: device selection result -> host numpy."""
-    if isinstance(sel, dict):
-        return sel
-    d = {
-        "path_nodes": sel.path_nodes, "path_actions": sel.path_actions,
-        "depths": sel.depths, "leaves": sel.leaves,
-        "expand_action": sel.expand_action, "n_insert": sel.n_insert,
-        "insert_base": sel.insert_base,
-    }
-    return {k: np.asarray(v) for k, v in jax.device_get(d).items()}
-
-
-def _sel_from_host(sel: dict):
-    return intree.SelectionResult(
-        **{k: sel[k] for k in (
-            "path_nodes", "path_actions", "depths", "leaves",
-            "expand_action", "n_insert", "insert_base")})
+def make_executor(cfg: TreeConfig, name: str) -> InTreeExecutor:
+    """Single-tree executor: the G=1 instance of the unified stack."""
+    return make_intree_executor(cfg, 1, name)
 
 
 # --------------------------------------------------------------------------
@@ -214,23 +116,10 @@ class HostExpansion:
     prior_parents: list  # parents receiving prior rows (expand-all mode)
     prior_workers: list  # worker index whose sim state produced each prior
 
-    def finalize_args(self, Fp: int, priors) -> tuple | None:
-        """Ragged finalize arguments (single-tree driver).  Returns
-        (nodes, num_actions, terminal, prior_parent, priors_fx) or None
-        when nothing was inserted."""
-        if not self.fin_nodes:
-            return None
-        pf = pp = None
-        if priors is not None and self.prior_workers:
-            pf = encode_prior_rows(priors, self.prior_workers, Fp)
-            pp = np.asarray(self.prior_parents, np.int32)
-        return (np.asarray(self.fin_nodes, np.int32),
-                np.asarray(self.fin_na, np.int32),
-                np.asarray(self.fin_term, np.int32), pp, pf)
-
     def padded_finalize_args(self, K: int, p: int, Fp: int, priors) -> tuple:
-        """Fixed-shape NULL-padded finalize arguments (arena driver: every
-        slot must contribute identical shapes to the vmapped finalize)."""
+        """Fixed-shape NULL-padded finalize arguments: every slot must
+        contribute identical shapes to the arena finalize (the G=1 driver
+        uses the same convention with a leading [1] axis)."""
         nodes = np.full(K, NULL, np.int32)
         na = np.zeros(K, np.int32)
         term = np.zeros(K, np.int32)
@@ -328,7 +217,9 @@ class StepStats:
 
 
 class TreeParallelMCTS:
-    """The full system of Fig. 2 on one host."""
+    """The full system of Fig. 2 on one host — the G=1 client of the
+    unified executor stack (`m.tree` views slot 0 of the executor's
+    arena; assigning it writes the slot back)."""
 
     def __init__(
         self,
@@ -342,9 +233,19 @@ class TreeParallelMCTS:
     ):
         self.cfg, self.env, self.sim, self.p = cfg, env, sim, p
         self.alternating_signs = alternating_signs
-        self.exec = make_executor(cfg, executor)
+        self.exec = make_intree_executor(cfg, 1, executor)
         self.st = StateTable(cfg.X, env.state_shape, env.state_dtype)
+        # fixed finalize width (the arena finalize takes one shape per slot)
+        self.K = p * cfg.Fp if cfg.expand_all else p
         self.reset(seed)
+
+    @property
+    def tree(self):
+        return self.exec.get_tree(0)
+
+    @tree.setter
+    def tree(self, t):
+        self.exec.set_tree(t, 0)
 
     def reset(self, seed: int = 0):
         s0 = self.env.initial_state(seed)
@@ -361,23 +262,22 @@ class TreeParallelMCTS:
         VL-recovery-only backup (see intree.backup_batch) so the tree
         invariants survive worker loss."""
         cfg, p, st = self.cfg, self.p, self.st
+        active = np.ones(1, bool)
         t0 = time.perf_counter()
-        self.tree, sel_dev = self.exec.selection(self.tree, p)
-        _block(self.tree)
+        sel_dev = self.exec.selection(active, p)
+        self.exec.block()
         t1 = time.perf_counter()
-        sel = _sel_to_host(sel_dev)
+        sel = self.exec.sel_to_host(sel_dev)           # [1, p, ...]
+        slot_sel = {k: v[0] for k, v in sel.items()}
         t2 = time.perf_counter()
 
         # Node Insertion (tree half, accelerator)
-        ins_sel = sel_dev if not isinstance(sel_dev, dict) else sel
-        self.tree, new_nodes = self.exec.insert(self.tree, ins_sel)
-        _block(self.tree)
+        new_nodes = self.exec.insert(active, sel_dev)  # [1, p, Fp] numpy
         t3 = time.perf_counter()
-        new_nodes = np.asarray(jax.device_get(new_nodes))
 
         # --- host: ST reads + 1-step sims + ST writes (sync-free) ---
         t4 = time.perf_counter()
-        hx = host_expand_phase(self.env, st, sel, new_nodes)
+        hx = host_expand_phase(self.env, st, slot_sel, new_nodes[0])
         sim_nodes = hx.sim_nodes
         t5 = time.perf_counter()
 
@@ -386,9 +286,11 @@ class TreeParallelMCTS:
         t6 = time.perf_counter()
 
         # --- barrier; Send buffer -> accelerator; finalize + BackUp ---
-        fin = hx.finalize_args(self.cfg.Fp, priors)
-        if fin is not None:
-            self.tree = self.exec.finalize(self.tree, *fin)
+        if hx.fin_nodes:   # saturated/terminal supersteps insert nothing
+            nodes, na, term, pp, pf = hx.padded_finalize_args(
+                self.K, p, cfg.Fp, priors)
+            self.exec.finalize(nodes[None], na[None], term[None], pp[None],
+                               pf[None])
         values_fx = np.asarray(fx.encode(values), np.int32)
         dropped = None
         if fault_injector is not None:
@@ -397,11 +299,11 @@ class TreeParallelMCTS:
             if not dropped.any():
                 dropped = None
         t7 = time.perf_counter()
-        bsel = sel_dev if not isinstance(sel_dev, dict) else sel
-        self.tree = self.exec.backup(
-            self.tree, bsel, sim_nodes.astype(np.int32), values_fx,
-            self.alternating_signs, dropped)
-        _block(self.tree)
+        self.exec.backup(
+            active, sel_dev, sim_nodes[None].astype(np.int32),
+            values_fx[None], self.alternating_signs,
+            None if dropped is None else dropped[None])
+        self.exec.block()
         t8 = time.perf_counter()
 
         s = self.stats
@@ -413,7 +315,7 @@ class TreeParallelMCTS:
         s.t_st += t5 - t4
         s.t_sim += t6 - t5
         s.t_backup += t8 - t7
-        return sel
+        return slot_sel
 
     # -- one MCTS step (paper Fig. 1): build tree to X nodes, act, flush
     def run_step(self, max_supersteps: int = 10_000, reuse_subtree: bool = False):
@@ -452,9 +354,3 @@ class TreeParallelMCTS:
 
     def _size(self):
         return self.tree.size
-
-
-def _block(tree):
-    x = tree.size if not isinstance(tree, ref.MutableTree) else None
-    if x is not None:
-        jax.block_until_ready(x)

@@ -62,6 +62,30 @@ def unpack_nodes(packed, x: int):
     return packed.reshape(-1)[:x]
 
 
+# ---- arena packing: a leading [G] slot axis over the same row layout ----
+#
+# The arena kernels block-map one slot per grid program, so the packed
+# layout just gains a leading G axis: [G, X, Fp] -> [G, X*Fp/128, 128].
+# vmap of the single-tree helpers keeps the two layouts one definition.
+
+def pack_edges_arena(arr, fp: int):
+    """[G, X, Fp] -> [G, Xp*Fp/128, 128]."""
+    return jax.vmap(lambda a: pack_edges(a, fp))(arr)
+
+
+def unpack_edges_arena(packed, x: int, fp: int):
+    return jax.vmap(lambda a: unpack_edges(a, x, fp))(packed)
+
+
+def pack_nodes_arena(arr):
+    """[G, X] -> [G, ceil(X/128), 128]."""
+    return jax.vmap(pack_nodes)(arr)
+
+
+def unpack_nodes_arena(packed, x: int):
+    return jax.vmap(lambda a: unpack_nodes(a, x))(packed)
+
+
 # ---- in-kernel access helpers (all row-granular) -------------------------
 
 def lane_iota():

@@ -1,6 +1,12 @@
 """jit'd wrappers exposing the Pallas kernels through the same API as
-repro.core.intree, so the BSP driver can swap executors freely
-(executor="pallas").
+repro.core.intree, so the unified executor stack (core.executor) can swap
+the kernels in freely (executor="pallas") — single-tree and arena alike.
+
+The arena entry points (`select_arena` / `backup_arena`) drive the
+[G]-grid kernels: one launch covers every tree slot, inactive slots no-op
+inside the kernel (no where_trees post-select needed), and the expansion
+assignment post-pass runs vmapped on the jit path exactly as the jax
+arena executor does.
 
 Kernels run in interpret mode by default (this container is CPU-only; the
 TPU backend is the compilation target).  Pass interpret=False on real TPU.
@@ -9,7 +15,9 @@ TPU backend is the compilation target).  Pass interpret=False on real TPU.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import intree
@@ -39,3 +47,40 @@ def backup_batch(cfg: TreeConfig, tree: UCTree, sel, sim_nodes, values_fx,
         alternating=alternating_signs, interpret=INTERPRET)
     return dataclasses.replace(
         tree, edge_N=en, edge_W=ew, edge_VL=evl, node_N=nn, node_O=no)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
+def _assign_expansions_arena(cfg: TreeConfig, arena: UCTree, sel_raw,
+                             p: int):
+    pn, pa, depths, leaves = sel_raw
+    _, sel = jax.vmap(
+        lambda t, n, a, d, l: intree._assign_expansions(cfg, t, n, a, d, l, p)
+    )(arena, pn, pa, depths, leaves)
+    return sel
+
+
+def select_arena(cfg: TreeConfig, arena: UCTree, active, p: int):
+    """Arena Selection; mirrors intree.select_arena.  Returns
+    (arena', sel[G, ...]).  The kernel freezes inactive slots itself, so
+    the returned arena needs no mask post-select; their sel rows are dead
+    data the host ignores (same contract as the jax arena path)."""
+    evl, no, pn, pa, depths, leaves = uct_select.select_arena(
+        cfg, arena, jnp.asarray(active, jnp.int32), p, interpret=INTERPRET)
+    arena = dataclasses.replace(arena, edge_VL=evl, node_O=no)
+    sel = _assign_expansions_arena(cfg, arena, (pn, pa, depths, leaves), p)
+    return arena, sel
+
+
+def backup_arena(cfg: TreeConfig, arena: UCTree, active, sel, sim_nodes,
+                 values_fx, alternating_signs: bool = False):
+    """Arena BackUp; mirrors intree.backup_arena (fault-free path)."""
+    p = sel.leaves.shape[1]
+    en, ew, evl, nn, no = uct_backup.backup_arena(
+        cfg, arena, jnp.asarray(active, jnp.int32),
+        sel.path_nodes, sel.path_actions,
+        jnp.asarray(sel.depths), jnp.asarray(sel.leaves),
+        jnp.asarray(sel.expand_action), jnp.asarray(sim_nodes, jnp.int32),
+        jnp.asarray(values_fx, jnp.int32), p=p,
+        alternating=alternating_signs, interpret=INTERPRET)
+    return dataclasses.replace(
+        arena, edge_N=en, edge_W=ew, edge_VL=evl, node_N=nn, node_O=no)

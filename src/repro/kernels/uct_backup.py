@@ -7,6 +7,12 @@ paths arrive as the `path_nodes`/`path_actions` arrays produced by the
 selection kernel, and every update is an exact Qm.16 integer add performed
 as a full-row VMEM read-modify-write.
 
+Arena-native like the selection kernel: a ``[G]`` grid maps one program to
+each tree slot (its packed statistic arrays block-mapped into VMEM, its
+scalars — here just the active flag — scalar-prefetched in SMEM), so all
+G trees back up in one launch and an inactive slot's program is a no-op
+pass-through.  Single-tree backup is the G=1 case.
+
 Integer adds commute, so although this kernel loops workers in order (to
 mirror the paper's pipeline), the result is independent of worker order —
 the property the vectorized jnp fallback (core.intree.backup_batch)
@@ -20,15 +26,19 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.tree import NULL, TreeConfig
 from repro.kernels import common as cm
+from repro.kernels.uct_select import META_ACTIVE, META_WORDS
 
 LANES = cm.LANES
 
 
 def _backup_kernel(
-    # inputs
+    # scalar prefetch
+    meta_ref,      # [G, 3] i32 in SMEM: (root, size, active) per slot
+    # inputs (per-slot blocks)
     pn_ref,        # [p, D] i32 memoized path nodes
     pa_ref,        # [p, D] i32 memoized path actions
     depth_ref,     # [1, p] i32
@@ -51,6 +61,8 @@ def _backup_kernel(
     Fp, D = cfg.Fp, cfg.D
     i32 = jnp.int32
     lane = cm.lane_iota()
+    g = pl.program_id(0)
+    slot_active = meta_ref[g, META_ACTIVE]
 
     edge_n_ref[...] = en_in_ref[...]
     edge_w_ref[...] = ew_in_ref[...]
@@ -118,55 +130,90 @@ def _backup_kernel(
                 jnp.where(expanded, i32(1), i32(0)))
         return 0
 
-    jax.lax.fori_loop(0, p, worker, 0)
+    # inactive slot -> no-op program (pass-through copies only)
+    @pl.when(slot_active == 1)
+    def _run_workers():
+        jax.lax.fori_loop(0, p, worker, 0)
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "p", "alternating", "interpret"))
-def backup(cfg: TreeConfig, tree, pn, pa, depths, leaves, expand_action,
-           sim_nodes, values_fx, p: int, alternating: bool = False,
-           interpret: bool = True):
-    """Run the backup kernel; returns updated (edge_N, edge_W, edge_VL,
-    node_N, node_O) in logical shapes."""
-    Fp, X = cfg.Fp, tree.X
-    en_p = cm.pack_edges(tree.edge_N, Fp)
-    ew_p = cm.pack_edges(tree.edge_W, Fp)
-    evl_p = cm.pack_edges(tree.edge_VL, Fp)
-    nn_p = cm.pack_nodes(tree.node_N)
-    no_p = cm.pack_nodes(tree.node_O)
-    er, nr = en_p.shape[0], nn_p.shape[0]
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "p", "alternating", "interpret"))
+def backup_arena(cfg: TreeConfig, arena, active, pn, pa, depths, leaves,
+                 expand_action, sim_nodes, values_fx, p: int,
+                 alternating: bool = False, interpret: bool = True):
+    """Backup kernel over a G-slot arena.  All per-worker inputs carry a
+    leading [G] axis ([G, p, D] paths, [G, p] scalars); `active` is a [G]
+    mask.  Returns updated (edge_N, edge_W, edge_VL, node_N, node_O) in
+    logical shapes [G, X, Fp] / [G, X]; inactive slots are bit-identical.
+    """
+    Fp = cfg.Fp
+    G, X = arena.child.shape[0], arena.child.shape[1]
+    en_p = cm.pack_edges_arena(arena.edge_N, Fp)
+    ew_p = cm.pack_edges_arena(arena.edge_W, Fp)
+    evl_p = cm.pack_edges_arena(arena.edge_VL, Fp)
+    nn_p = cm.pack_nodes_arena(arena.node_N)
+    no_p = cm.pack_nodes_arena(arena.node_O)
+    er, nr = en_p.shape[1], nn_p.shape[1]
     D = cfg.D
+    meta = jnp.zeros((G, META_WORDS), jnp.int32)
+    meta = meta.at[:, META_ACTIVE].set(jnp.asarray(active, jnp.int32))
 
-    full = lambda shp: pl.BlockSpec(shp, lambda: tuple(0 for _ in shp))
+    slot = lambda *shp: pl.BlockSpec((None,) + shp,
+                                     lambda g, m: (g,) + (0,) * len(shp))
     out_shapes = tuple(
-        jax.ShapeDtypeStruct((er, LANES), jnp.int32) for _ in range(3)
-    ) + tuple(jax.ShapeDtypeStruct((nr, LANES), jnp.int32) for _ in range(2))
+        jax.ShapeDtypeStruct((G, er, LANES), jnp.int32) for _ in range(3)
+    ) + tuple(
+        jax.ShapeDtypeStruct((G, nr, LANES), jnp.int32) for _ in range(2))
     kernel = functools.partial(
         _backup_kernel, cfg=cfg, p=p, alternating=alternating)
-    en2, ew2, evl2, nn2, no2 = pl.pallas_call(
-        kernel,
-        out_shape=out_shapes,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G,),
         in_specs=[
-            full((p, D)), full((p, D)), full((1, p)), full((1, p)),
-            full((1, p)), full((1, p)), full((1, p)),
-            full((er, LANES)), full((er, LANES)), full((er, LANES)),
-            full((nr, LANES)), full((nr, LANES)),
+            slot(p, D), slot(p, D), slot(1, p), slot(1, p),
+            slot(1, p), slot(1, p), slot(1, p),
+            slot(er, LANES), slot(er, LANES), slot(er, LANES),
+            slot(nr, LANES), slot(nr, LANES),
         ],
         out_specs=[
-            full((er, LANES)), full((er, LANES)), full((er, LANES)),
-            full((nr, LANES)), full((nr, LANES)),
+            slot(er, LANES), slot(er, LANES), slot(er, LANES),
+            slot(nr, LANES), slot(nr, LANES),
         ],
-        input_output_aliases={7: 0, 8: 1, 9: 2, 10: 3, 11: 4},
+    )
+    # input indices count the scalar-prefetch operand (meta = 0)
+    en2, ew2, evl2, nn2, no2 = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        input_output_aliases={8: 0, 9: 1, 10: 2, 11: 3, 12: 4},
         interpret=interpret,
     )(
-        pn, pa, depths.reshape(1, p), leaves.reshape(1, p),
-        expand_action.reshape(1, p), sim_nodes.reshape(1, p),
-        values_fx.reshape(1, p),
+        meta, pn, pa, depths.reshape(G, 1, p), leaves.reshape(G, 1, p),
+        expand_action.reshape(G, 1, p), sim_nodes.reshape(G, 1, p),
+        values_fx.reshape(G, 1, p),
         en_p, ew_p, evl_p, nn_p, no_p,
     )
     return (
-        cm.unpack_edges(en2, X, Fp),
-        cm.unpack_edges(ew2, X, Fp),
-        cm.unpack_edges(evl2, X, Fp),
-        cm.unpack_nodes(nn2, X),
-        cm.unpack_nodes(no2, X),
+        cm.unpack_edges_arena(en2, X, Fp),
+        cm.unpack_edges_arena(ew2, X, Fp),
+        cm.unpack_edges_arena(evl2, X, Fp),
+        cm.unpack_nodes_arena(nn2, X),
+        cm.unpack_nodes_arena(no2, X),
     )
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "p", "alternating", "interpret"))
+def backup(cfg: TreeConfig, tree, pn, pa, depths, leaves, expand_action,
+           sim_nodes, values_fx, p: int, alternating: bool = False,
+           interpret: bool = True):
+    """Single-tree backup: the G=1 case of the arena kernel.  Returns
+    updated (edge_N, edge_W, edge_VL, node_N, node_O) in logical shapes."""
+    arena = jax.tree.map(lambda a: a[None], tree)
+    en, ew, evl, nn, no = backup_arena(
+        cfg, arena, jnp.ones((1,), jnp.int32), pn[None], pa[None],
+        jnp.asarray(depths)[None], jnp.asarray(leaves)[None],
+        jnp.asarray(expand_action)[None], jnp.asarray(sim_nodes)[None],
+        jnp.asarray(values_fx)[None], p=p, alternating=alternating,
+        interpret=interpret)
+    return en[0], ew[0], evl[0], nn[0], no[0]

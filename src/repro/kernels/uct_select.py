@@ -17,10 +17,16 @@ ordering is preserved exactly (worker k sees the virtual loss of workers
 < k), so outputs are bit-identical to the sequential CPU program; the
 kernel shares the scoring spec of repro.core.scoring verbatim.
 
+Arena-native: the kernel runs on a ``[G]`` grid — one program per tree
+slot, that slot's packed UCT arrays block-mapped into VMEM — so G
+independent searches (the service layer's arena) cost ONE kernel launch.
+Per-slot scalars (root id, tree size, active flag) ride in an SMEM
+scalar-prefetch operand; an inactive slot's program is a no-op (the
+aliased buffers pass through untouched), which keeps parked trees
+bit-frozen.  Single-tree selection is the G=1 case.
+
 The kernel is written for the TPU backend (2-D iotas, row-granular RMW,
-power-of-two edge blocks) and validated in interpret mode on CPU; scalar
-operands (root id, tree size) ride in [1,1] VMEM rows — a production build
-would hoist them to SMEM scalar prefetch.
+power-of-two edge blocks) and validated in interpret mode on CPU.
 """
 
 from __future__ import annotations
@@ -30,18 +36,27 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from repro.core import fixedpoint as fx
 from repro.core import scoring
 from repro.core.tree import NULL, TreeConfig
 from repro.kernels import common as cm
 
 LANES = cm.LANES
 
+# meta layout: one SMEM row of per-slot scalars, prefetched before the
+# grid program runs (paper: the accelerator's per-tree control registers).
+# META_SIZE is reserved: the kernels read the whole block-mapped slot, but
+# the TPU build will use the live tree size to bound the DMA'd prefix of
+# the statistic arrays instead of shipping all X rows per slot.
+META_ROOT, META_SIZE, META_ACTIVE = 0, 1, 2
+META_WORDS = 3
+
 
 def _select_kernel(
-    # inputs
-    root_ref,        # [1,1] i32
+    # scalar prefetch
+    meta_ref,        # [G, 3] i32 in SMEM: (root, size, active) per slot
+    # inputs (per-slot VMEM blocks)
     child_ref,       # [Er, 128] i32 packed edges
     edge_n_ref,      # [Er, 128] i32
     edge_w_ref,      # [Er, 128] i32 (Qm.16)
@@ -53,7 +68,7 @@ def _select_kernel(
     log_ref,         # [Lr, 128] f32 packed ln table
     evl_in_ref,      # [Er, 128] i32 (aliased with edge_vl_ref)
     no_in_ref,       # [Nr, 128] i32 (aliased with node_o_ref)
-    # outputs
+    # outputs (per-slot VMEM blocks)
     edge_vl_ref,     # [Er, 128] i32
     node_o_ref,      # [Nr, 128] i32
     pn_ref,          # [p, D] i32
@@ -67,6 +82,9 @@ def _select_kernel(
     Fp, D = cfg.Fp, cfg.D
     lane = cm.lane_iota()
     i32 = jnp.int32
+    g = pl.program_id(0)
+    root = meta_ref[g, META_ROOT]
+    slot_active = meta_ref[g, META_ACTIVE]
 
     # Aliased buffers: physically a no-op copy; keeps the kernel correct
     # when run un-aliased (e.g. some interpret configurations).
@@ -75,7 +93,8 @@ def _select_kernel(
     # init path outputs to NULL
     pn_ref[...] = jnp.full((p, D), NULL, i32)
     pa_ref[...] = jnp.full((p, D), NULL, i32)
-    root = root_ref[0, 0]
+    depth_ref[...] = jnp.zeros((1, p), i32)
+    leaf_ref[...] = jnp.zeros((1, p), i32)
 
     def worker(j, _):
         cm.sadd(node_o_ref, root, 1)
@@ -120,11 +139,11 @@ def _select_kernel(
             # first-max argmax over the full 128-lane row, as two 2-D
             # reductions (max, then min-index-of-max) — Mosaic-friendly.
             m = jnp.max(scores)
-            g = jnp.min(jnp.where(scores == m, lane, i32(LANES))).astype(i32)
+            g_ = jnp.min(jnp.where(scores == m, lane, i32(LANES))).astype(i32)
 
             # virtual-loss apply (Alg. 1 line 5) — row RMW
             vl_row = cm.load_row(edge_vl_ref, row)
-            inc = jnp.where(active & (lane == g), i32(1), i32(0))
+            inc = jnp.where(active & (lane == g_), i32(1), i32(0))
             cm.store_row(edge_vl_ref, row, vl_row + inc)
 
             # memoization buffer write (paper §IV-E)
@@ -135,9 +154,9 @@ def _select_kernel(
             pl.store(pn_ref, (pl.dslice(j, 1), slice(None)),
                      jnp.where(sel_d, node, pn_row))
             pl.store(pa_ref, (pl.dslice(j, 1), slice(None)),
-                     jnp.where(sel_d, g - off, pa_row))
+                     jnp.where(sel_d, g_ - off, pa_row))
 
-            nxt = cm.extract_lane(child_m, g)
+            nxt = cm.extract_lane(child_m, g_)
             node = jnp.where(active, nxt, node)
             cm.sadd(node_o_ref, node, jnp.where(active, i32(1), i32(0)))
             depth = depth + jnp.where(active, i32(1), i32(0))
@@ -153,61 +172,91 @@ def _select_kernel(
                  jnp.where(sel_j, node, leaf_row))
         return 0
 
-    depth_ref[...] = jnp.zeros((1, p), i32)
-    leaf_ref[...] = jnp.zeros((1, p), i32)
-    jax.lax.fori_loop(0, p, worker, 0)
+    # inactive slot -> no-op program: the pass-through copies above leave
+    # the tree statistics bit-identical and the path outputs are dead rows
+    @pl.when(slot_active == 1)
+    def _run_workers():
+        jax.lax.fori_loop(0, p, worker, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "p", "interpret"))
+def select_arena(cfg: TreeConfig, arena, active, p: int,
+                 interpret: bool = True):
+    """Selection kernel over a G-slot arena (one grid program per slot).
+
+    `arena` is a UCTree whose leaves carry a leading [G] axis; `active` is
+    a [G] mask (bool or i32).  Returns (edge_VL', node_O', path_nodes,
+    path_actions, depths, leaves) with logical (unpacked) shapes
+    [G, X, Fp] / [G, X] / [G, p, D] / [G, p].  Inactive slots come back
+    bit-identical with NULL/zero path rows.
+    """
+    Fp, D = cfg.Fp, cfg.D
+    G, X = arena.child.shape[0], arena.child.shape[1]
+    child_p = cm.pack_edges_arena(arena.child, Fp)
+    en_p = cm.pack_edges_arena(arena.edge_N, Fp)
+    ew_p = cm.pack_edges_arena(arena.edge_W, Fp)
+    ep_p = cm.pack_edges_arena(arena.edge_P, Fp)
+    evl_p = cm.pack_edges_arena(arena.edge_VL, Fp)
+    nn_p = cm.pack_nodes_arena(arena.node_N)
+    no_p = cm.pack_nodes_arena(arena.node_O)
+    ne_p = cm.pack_nodes_arena(arena.num_expanded)
+    na_p = cm.pack_nodes_arena(arena.num_actions)
+    tm_p = cm.pack_nodes_arena(arena.terminal)
+    lg_p = cm.pack_nodes_arena(arena.log_table)
+    meta = jnp.stack(
+        [jnp.asarray(arena.root, jnp.int32),
+         jnp.asarray(arena.size, jnp.int32),
+         jnp.asarray(active, jnp.int32)], axis=1)          # [G, 3]
+
+    er, nr, lr = child_p.shape[1], nn_p.shape[1], lg_p.shape[1]
+    slot = lambda *shp: pl.BlockSpec((None,) + shp,
+                                     lambda g, m: (g,) + (0,) * len(shp))
+    out_shapes = (
+        jax.ShapeDtypeStruct((G, er, LANES), jnp.int32),   # edge_VL'
+        jax.ShapeDtypeStruct((G, nr, LANES), jnp.int32),   # node_O'
+        jax.ShapeDtypeStruct((G, p, D), jnp.int32),        # path_nodes
+        jax.ShapeDtypeStruct((G, p, D), jnp.int32),        # path_actions
+        jax.ShapeDtypeStruct((G, 1, p), jnp.int32),        # depths
+        jax.ShapeDtypeStruct((G, 1, p), jnp.int32),        # leaves
+    )
+    kernel = functools.partial(_select_kernel, cfg=cfg, p=p)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(G,),
+        in_specs=[
+            slot(er, LANES), slot(er, LANES), slot(er, LANES),
+            slot(er, LANES),
+            slot(nr, LANES), slot(nr, LANES), slot(nr, LANES),
+            slot(nr, LANES), slot(lr, LANES),
+            slot(er, LANES), slot(nr, LANES),
+        ],
+        out_specs=[
+            slot(er, LANES), slot(nr, LANES),
+            slot(p, D), slot(p, D), slot(1, p), slot(1, p),
+        ],
+    )
+    # input indices count the scalar-prefetch operand (meta = 0)
+    evl2, no2, pn, pa, dep, leaf = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shapes,
+        input_output_aliases={10: 0, 11: 1},
+        interpret=interpret,
+    )(meta, child_p, en_p, ew_p, ep_p, nn_p, ne_p, na_p, tm_p, lg_p,
+      evl_p, no_p)
+    return (
+        cm.unpack_edges_arena(evl2, X, Fp),
+        cm.unpack_nodes_arena(no2, X),
+        pn, pa, dep[:, 0], leaf[:, 0],
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "p", "interpret"))
 def select(cfg: TreeConfig, tree, p: int, interpret: bool = True):
-    """Run the selection kernel.  Returns (edge_VL', node_O', path_nodes,
-    path_actions, depths, leaves) with logical (unpacked) shapes."""
-    Fp, X, D = cfg.Fp, tree.X, cfg.D
-    child_p = cm.pack_edges(tree.child, Fp)
-    en_p = cm.pack_edges(tree.edge_N, Fp)
-    ew_p = cm.pack_edges(tree.edge_W, Fp)
-    ep_p = cm.pack_edges(tree.edge_P, Fp)
-    evl_p = cm.pack_edges(tree.edge_VL, Fp)
-    nn_p = cm.pack_nodes(tree.node_N)
-    no_p = cm.pack_nodes(tree.node_O)
-    ne_p = cm.pack_nodes(tree.num_expanded)
-    na_p = cm.pack_nodes(tree.num_actions)
-    tm_p = cm.pack_nodes(tree.terminal)
-    lg_p = cm.pack_nodes(tree.log_table)
-    root = tree.root.reshape(1, 1)
-
-    er, nr, lr = child_p.shape[0], nn_p.shape[0], lg_p.shape[0]
-    full = lambda shp: pl.BlockSpec(shp, lambda: tuple(0 for _ in shp))
-    out_shapes = (
-        jax.ShapeDtypeStruct((er, LANES), jnp.int32),   # edge_VL'
-        jax.ShapeDtypeStruct((nr, LANES), jnp.int32),   # node_O'
-        jax.ShapeDtypeStruct((p, D), jnp.int32),        # path_nodes
-        jax.ShapeDtypeStruct((p, D), jnp.int32),        # path_actions
-        jax.ShapeDtypeStruct((1, p), jnp.int32),        # depths
-        jax.ShapeDtypeStruct((1, p), jnp.int32),        # leaves
-    )
-    kernel = functools.partial(_select_kernel, cfg=cfg, p=p)
-    evl2, no2, pn, pa, dep, leaf = pl.pallas_call(
-        kernel,
-        out_shape=out_shapes,
-        in_specs=[
-            full((1, 1)),
-            full((er, LANES)), full((er, LANES)), full((er, LANES)),
-            full((er, LANES)),
-            full((nr, LANES)), full((nr, LANES)), full((nr, LANES)),
-            full((nr, LANES)), full((lr, LANES)),
-            full((er, LANES)), full((nr, LANES)),
-        ],
-        out_specs=[
-            full((er, LANES)), full((nr, LANES)),
-            full((p, D)), full((p, D)), full((1, p)), full((1, p)),
-        ],
-        input_output_aliases={10: 0, 11: 1},
-        interpret=interpret,
-    )(root, child_p, en_p, ew_p, ep_p, nn_p, ne_p, na_p, tm_p, lg_p,
-      evl_p, no_p)
-    return (
-        cm.unpack_edges(evl2, X, Fp),
-        cm.unpack_nodes(no2, X),
-        pn, pa, dep[0], leaf[0],
-    )
+    """Single-tree selection: the G=1 case of the arena kernel.  Returns
+    (edge_VL', node_O', path_nodes, path_actions, depths, leaves) with
+    logical (unpacked) shapes."""
+    arena = jax.tree.map(lambda a: a[None], tree)
+    evl, no, pn, pa, dep, leaf = select_arena(
+        cfg, arena, jnp.ones((1,), jnp.int32), p, interpret=interpret)
+    return evl[0], no[0], pn[0], pa[0], dep[0], leaf[0]

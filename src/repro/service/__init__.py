@@ -5,13 +5,15 @@ scheduler.py (slot admission / fused simulation batching / eviction).
 """
 
 from repro.service.arena import (
-    JaxArenaExecutor, ReferenceArenaExecutor, make_arena_executor,
+    JaxArenaExecutor, PallasArenaExecutor, ReferenceArenaExecutor,
+    make_arena_executor,
 )
 from repro.service.scheduler import (
     SearchRequest, SearchResult, SearchService, ServiceStats,
 )
 
 __all__ = [
-    "JaxArenaExecutor", "ReferenceArenaExecutor", "make_arena_executor",
+    "JaxArenaExecutor", "PallasArenaExecutor", "ReferenceArenaExecutor",
+    "make_arena_executor",
     "SearchRequest", "SearchResult", "SearchService", "ServiceStats",
 ]

@@ -1,180 +1,32 @@
-"""Tree arena — G independent UCTrees driven as one device program.
+"""Tree-arena executors — compat shim over the unified stack.
 
-The paper's accelerator serves p workers on ONE tree and its stated
-scalability ceiling is in-tree occupancy.  The service layer scales on the
-other axis: G *independent* searches (one per user request) stacked into a
-single pytree (core.tree.init_arena), with every in-tree phase vmapped
-across slots (core.intree.*_arena).  One superstep of the arena is one
-Selection + Insertion + BackUp launch for ALL active slots — the device
-sees a [G, ...] batch instead of G ragged launches, exactly the
-array-of-trees layout of Ragan et al. (arXiv:2508.20140) applied to the
-paper's UCT decomposition.
+The two executor hierarchies this module and core.mcts used to carry
+(single-tree vs arena) are collapsed into core.executor: one
+InTreeExecutor protocol, every backend (reference / faithful / relaxed /
+wavefront / pallas) driving G >= 1 stacked tree slots under an active
+mask.  The arena-native [G]-grid Pallas kernels serve the arena directly
+now — variant="pallas" is a first-class executor, no longer gated out.
 
-Two executors share the ArenaExecutor interface:
-
-  JaxArenaExecutor       — stacked trees + vmapped jit ops ("faithful",
-                           "relaxed", "wavefront" variants; the Pallas
-                           kernels manage their own grids and are not
-                           vmappable, so variant="pallas" is rejected);
-  ReferenceArenaExecutor — one sequential numpy MutableTree per slot, the
-                           correctness oracle and CPU baseline for
-                           benchmarks/bench_service.py.
-
-Idle-slot semantics: ops run on every slot (uniform program, no ragged
-dispatch) and tree.where_trees discards updates to inactive slots, so a
-parked tree is bit-frozen while its neighbours search.  Slot snapshots and
-writes (admission, re-root) are host-side and off the hot superstep path.
+The old service-layer names remain importable here; new code should use
+repro.core.executor.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import jax
-import numpy as np
-
-from repro.core import intree, ref_sequential as ref
-from repro.core.mcts import _sel_to_host
-from repro.core.tree import (
-    NULL, TreeConfig, UCTree, arena_set_slot, arena_slot, init_arena,
-    init_tree, to_jax,
+from repro.core.executor import (
+    InTreeExecutor,
+    JaxExecutor as JaxArenaExecutor,
+    PallasExecutor as PallasArenaExecutor,
+    ReferenceExecutor as ReferenceArenaExecutor,
+    make_intree_executor,
 )
+from repro.core.tree import TreeConfig
 
-import jax.numpy as jnp
-
-
-class JaxArenaExecutor:
-    """Vmapped jit in-tree operations over G stacked trees."""
-
-    def __init__(self, cfg: TreeConfig, G: int, variant: str = "faithful"):
-        if variant not in ("faithful", "relaxed", "wavefront"):
-            raise NotImplementedError(
-                f"arena variant {variant!r}: only the vmappable jit paths "
-                "(faithful/relaxed/wavefront) run under the arena")
-        self.cfg, self.G, self.variant = cfg, G, variant
-        self.trees = init_arena(cfg, G)
-
-    def reset_slot(self, g: int, root_num_actions: int):
-        self.trees = arena_set_slot(
-            self.trees, g, init_tree(self.cfg, root_num_actions))
-
-    def selection(self, active: np.ndarray, p: int):
-        self.trees, sel = intree.select_arena(
-            self.cfg, self.trees, jnp.asarray(active), p, self.variant)
-        return sel
-
-    def insert(self, active: np.ndarray, sel):
-        self.trees, new_nodes = intree.insert_arena(
-            self.cfg, self.trees, jnp.asarray(active), sel)
-        return np.asarray(jax.device_get(new_nodes))
-
-    def finalize(self, nodes, num_actions, terminal, prior_parent, priors_fx):
-        self.trees = intree.finalize_arena(
-            self.trees, jnp.asarray(nodes), jnp.asarray(num_actions),
-            jnp.asarray(terminal), jnp.asarray(prior_parent),
-            jnp.asarray(priors_fx))
-
-    def backup(self, active, sel, sim_nodes, values_fx, alternating: bool):
-        self.trees = intree.backup_arena(
-            self.cfg, self.trees, jnp.asarray(active), sel,
-            jnp.asarray(sim_nodes), jnp.asarray(values_fx), alternating)
-        jax.block_until_ready(self.trees.size)
-
-    def sel_to_host(self, sel) -> dict:
-        return _sel_to_host(sel)
-
-    def best_actions(self) -> np.ndarray:
-        return np.asarray(jax.device_get(
-            intree.best_root_action_arena(self.trees)))
-
-    def sizes(self) -> np.ndarray:
-        return np.asarray(jax.device_get(self.trees.size))
-
-    def slot_snapshot(self, g: int) -> dict:
-        one = jax.device_get(arena_slot(self.trees, g))
-        return {k: np.asarray(v) for k, v in dataclasses.asdict(one).items()}
-
-    def write_slot(self, g: int, arrays: dict):
-        self.trees = arena_set_slot(
-            self.trees, g, to_jax(UCTree(**arrays)))
+__all__ = [
+    "InTreeExecutor", "JaxArenaExecutor", "PallasArenaExecutor",
+    "ReferenceArenaExecutor", "make_arena_executor", "make_intree_executor",
+]
 
 
-class ReferenceArenaExecutor:
-    """Sequential numpy oracle: one MutableTree per slot, looped on host.
-
-    Same interface and same stacked [G, ...] host-array convention as the
-    jit arena so the scheduler is executor-agnostic; inactive slots produce
-    zero rows the driver never reads.
-    """
-
-    def __init__(self, cfg: TreeConfig, G: int):
-        self.cfg, self.G = cfg, G
-        self.trees = [ref.MutableTree.from_tree(init_tree(cfg, xp=np))
-                      for _ in range(G)]
-
-    def reset_slot(self, g: int, root_num_actions: int):
-        self.trees[g] = ref.MutableTree.from_tree(
-            init_tree(self.cfg, root_num_actions, xp=np))
-
-    def selection(self, active: np.ndarray, p: int) -> dict:
-        cfg = self.cfg
-        out = {
-            "path_nodes": np.full((self.G, p, cfg.D), NULL, np.int32),
-            "path_actions": np.full((self.G, p, cfg.D), NULL, np.int32),
-            "depths": np.zeros((self.G, p), np.int32),
-            "leaves": np.zeros((self.G, p), np.int32),
-            "expand_action": np.full((self.G, p), NULL, np.int32),
-            "n_insert": np.zeros((self.G, p), np.int32),
-            "insert_base": np.zeros((self.G, p), np.int32),
-        }
-        for g in np.flatnonzero(active):
-            t = self.trees[g]
-            sel = ref.selection_phase(cfg, t, p)
-            ni = sel["n_insert"]
-            sel["insert_base"] = t.size + np.cumsum(ni) - ni
-            for k, v in sel.items():
-                out[k][g] = v
-        return out
-
-    def insert(self, active: np.ndarray, sel: dict) -> np.ndarray:
-        p = sel["leaves"].shape[1]
-        new_nodes = np.full((self.G, p, self.cfg.Fp), NULL, np.int32)
-        for g in np.flatnonzero(active):
-            slot_sel = {k: v[g] for k, v in sel.items()}
-            new_nodes[g] = ref.insert_phase(self.cfg, self.trees[g], slot_sel)
-        return new_nodes
-
-    def finalize(self, nodes, num_actions, terminal, prior_parent, priors_fx):
-        for g in range(self.G):
-            ref.finalize_expansion(
-                self.trees[g], nodes[g], num_actions[g], terminal[g],
-                prior_parent[g], priors_fx[g])
-
-    def backup(self, active, sel, sim_nodes, values_fx, alternating: bool):
-        for g in np.flatnonzero(active):
-            slot_sel = {k: v[g] for k, v in sel.items()}
-            ref.backup_phase(self.cfg, self.trees[g], slot_sel,
-                             sim_nodes[g], values_fx[g], alternating)
-
-    def sel_to_host(self, sel) -> dict:
-        return sel
-
-    def best_actions(self) -> np.ndarray:
-        return np.array([ref.best_root_action(self.cfg, t)
-                         for t in self.trees], np.int32)
-
-    def sizes(self) -> np.ndarray:
-        return np.array([t.size for t in self.trees], np.int32)
-
-    def slot_snapshot(self, g: int) -> dict:
-        return {k: np.asarray(v) for k, v in
-                dataclasses.asdict(self.trees[g].to_tree()).items()}
-
-    def write_slot(self, g: int, arrays: dict):
-        self.trees[g] = ref.MutableTree.from_tree(UCTree(**arrays))
-
-
-def make_arena_executor(cfg: TreeConfig, G: int, name: str):
-    if name == "reference":
-        return ReferenceArenaExecutor(cfg, G)
-    return JaxArenaExecutor(cfg, G, name)
+def make_arena_executor(cfg: TreeConfig, G: int, name: str) -> InTreeExecutor:
+    return make_intree_executor(cfg, G, name)

@@ -20,6 +20,14 @@ Lifecycle of a request:
                 subtree (statistics preserved) and the search continues on
                 the same slot for its next move.
 
+Active-slot compaction: idle slots execute masked device work under the
+uniform arena program — fine at high occupancy, wasteful at low.  Below an
+occupancy threshold the scheduler gathers the A active slots into a dense
+sub-arena (padded to the next power of two so the device program cache
+stays bounded), runs every device phase on the sub-arena, and scatters the
+results back (executor.gather_sub / scatter_sub).  Per-slot arithmetic is
+position-independent, so masked and compacted execution are bit-identical.
+
 Determinism: with a deterministic SimulationBackend the per-slot tree
 evolution is bit-identical to a single-tree TreeParallelMCTS run of the
 same request (tests/test_service.py) — scheduling changes WHEN a tree's
@@ -86,6 +94,8 @@ class ServiceStats:
     sim_rows: int = 0            # fused simulation-batch rows evaluated
     sim_batches: int = 0         # evaluate() calls (one per superstep)
     max_fused_rows: int = 0
+    compacted_supersteps: int = 0  # supersteps run on a gathered sub-arena
+    occupancy_sum: float = 0.0     # sum of per-superstep A/G (avg = /supersteps)
     t_intree: float = 0.0        # select + insert + finalize + backup
     t_host: float = 0.0          # ST / env expansion + scheduling bookkeeping
     t_sim: float = 0.0
@@ -104,11 +114,18 @@ class SearchService:
         executor: str = "faithful",
         alternating_signs: bool = False,
         reuse_subtree: bool = True,
+        compact_threshold: float = 0.0,
     ):
         self.cfg, self.env, self.sim = cfg, env, sim
         self.G, self.p = G, p
         self.alternating_signs = alternating_signs
         self.reuse_subtree = reuse_subtree
+        # occupancy A/G at or below this gathers active slots into a dense
+        # sub-arena for the device phases.  Opt-in (0.0 = always masked):
+        # BENCH_service.json shows the per-superstep gather/scatter costs
+        # more than the masked work it saves on this CPU container; raise
+        # it when the arena lives on a real device or X grows
+        self.compact_threshold = compact_threshold
         self.exec = make_arena_executor(cfg, G, executor)
         self.sts = [StateTable(cfg.X, env.state_shape, env.state_dtype)
                     for _ in range(G)]
@@ -116,6 +133,7 @@ class SearchService:
         self.queue: list[SearchRequest] = []
         self.completed: list[SearchResult] = []
         self.stats = ServiceStats()
+        self.last_decision: dict = {}   # per-superstep occupancy/compaction
         # fixed per-slot finalize width (vmapped finalize needs one shape)
         self.K = p * cfg.Fp if cfg.expand_all else p
 
@@ -144,6 +162,26 @@ class SearchService:
     def _active(self) -> np.ndarray:
         return np.array([s is not None for s in self.slots], bool)
 
+    # ---- occupancy decision: masked full arena vs gathered sub-arena ----
+    def _pick_execution(self, active: np.ndarray):
+        """Return (executor, exec_active, rows, act_idx): `rows[i]` is the
+        arena row carrying active slot `act_idx[i]` on the chosen executor
+        (identity when masked, dense prefix when compacted)."""
+        act_idx = np.flatnonzero(active)
+        A = len(act_idx)
+        Gc = 1 << (A - 1).bit_length()     # pow2 pad: bounded program cache
+        compacted = (self.compact_threshold > 0.0
+                     and A <= self.compact_threshold * self.G
+                     and Gc < self.G)
+        self.last_decision = {
+            "A": A, "G": self.G, "occupancy": A / self.G,
+            "compacted": compacted, "G_exec": Gc if compacted else self.G,
+        }
+        if compacted:
+            sub = self.exec.gather_sub(act_idx, Gc)
+            return sub, np.arange(Gc) < A, np.arange(A), act_idx
+        return self.exec, active, act_idx, act_idx
+
     # ---- one fused superstep over all occupied slots ----
     def superstep(self) -> bool:
         self._admit()
@@ -153,18 +191,19 @@ class SearchService:
         p, cfg = self.p, self.cfg
         t0 = time.perf_counter()
 
-        sel_dev = self.exec.selection(active, p)
-        sel = self.exec.sel_to_host(sel_dev)                  # [G, p, ...]
-        new_nodes = self.exec.insert(active, sel_dev)         # [G, p, Fp]
+        ex, ex_active, rows, act_idx = self._pick_execution(active)
+        Ge = ex.G
+        sel_dev = ex.selection(ex_active, p)
+        sel = ex.sel_to_host(sel_dev)                         # [Ge, p, ...]
+        new_nodes = ex.insert(ex_active, sel_dev)             # [Ge, p, Fp]
         t1 = time.perf_counter()
 
         # host expansion per slot, then ONE fused Simulation batch
-        act_idx = np.flatnonzero(active)
         hx = {}
-        for g in act_idx:
-            slot_sel = {k: v[g] for k, v in sel.items()}
+        for r, g in zip(rows, act_idx):
+            slot_sel = {k: v[r] for k, v in sel.items()}
             hx[g] = host_expand_phase(self.env, self.sts[g], slot_sel,
-                                      new_nodes[g])
+                                      new_nodes[r])
         fused = np.concatenate([hx[g].sim_states for g in act_idx])
         t2 = time.perf_counter()
         values, priors = self.sim.evaluate(fused)
@@ -175,28 +214,32 @@ class SearchService:
 
         # split fused results, finalize + BackUp across all slots at once
         values_fx = np.asarray(fx.encode(np.asarray(values)), np.int32)
-        fin_nodes = np.full((self.G, self.K), NULL, np.int32)
-        fin_na = np.zeros((self.G, self.K), np.int32)
-        fin_term = np.zeros((self.G, self.K), np.int32)
-        fin_pp = np.full((self.G, p), NULL, np.int32)
-        fin_pf = np.zeros((self.G, p, cfg.Fp), np.int32)
-        sim_nodes = np.zeros((self.G, p), np.int32)
-        vals = np.zeros((self.G, p), np.int32)
-        for i, g in enumerate(act_idx):
+        fin_nodes = np.full((Ge, self.K), NULL, np.int32)
+        fin_na = np.zeros((Ge, self.K), np.int32)
+        fin_term = np.zeros((Ge, self.K), np.int32)
+        fin_pp = np.full((Ge, p), NULL, np.int32)
+        fin_pf = np.zeros((Ge, p, cfg.Fp), np.int32)
+        sim_nodes = np.zeros((Ge, p), np.int32)
+        vals = np.zeros((Ge, p), np.int32)
+        for i, (r, g) in enumerate(zip(rows, act_idx)):
             row = slice(i * p, (i + 1) * p)
             pr = priors[row] if priors is not None else None
-            (fin_nodes[g], fin_na[g], fin_term[g], fin_pp[g],
-             fin_pf[g]) = hx[g].padded_finalize_args(self.K, p, cfg.Fp, pr)
-            sim_nodes[g] = hx[g].sim_nodes
-            vals[g] = values_fx[row]
+            (fin_nodes[r], fin_na[r], fin_term[r], fin_pp[r],
+             fin_pf[r]) = hx[g].padded_finalize_args(self.K, p, cfg.Fp, pr)
+            sim_nodes[r] = hx[g].sim_nodes
+            vals[r] = values_fx[row]
         t4 = time.perf_counter()
 
-        self.exec.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
-        self.exec.backup(active, sel_dev, sim_nodes, vals,
-                         self.alternating_signs)
+        ex.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
+        ex.backup(ex_active, sel_dev, sim_nodes, vals,
+                  self.alternating_signs)
+        if ex is not self.exec:
+            self.exec.scatter_sub(ex, act_idx)
+            self.stats.compacted_supersteps += 1
         t5 = time.perf_counter()
 
         self.stats.supersteps += 1
+        self.stats.occupancy_sum += len(act_idx) / self.G
         self.stats.t_intree += (t1 - t0) + (t5 - t4)
         self.stats.t_host += (t2 - t1) + (t4 - t3)
         self.stats.t_sim += t3 - t2

@@ -192,6 +192,13 @@ def test_expand_all_puct_service_runs():
         assert s["edge_P"].any()  # priors landed
 
 
-def test_pallas_variant_rejected():
+def test_pallas_is_first_class_arena_executor():
+    """The arena-native kernels serve the arena directly: "pallas" is its
+    own executor in the unified stack (not a JaxExecutor variant, which
+    still rejects the name — the jit and kernel paths stay distinct)."""
+    from repro.service import PallasArenaExecutor, make_arena_executor
+    ex = make_arena_executor(CFG, 2, "pallas")
+    assert isinstance(ex, PallasArenaExecutor)
+    assert ex.G == 2
     with pytest.raises(NotImplementedError):
         JaxArenaExecutor(CFG, 2, variant="pallas")
