@@ -13,6 +13,10 @@ over the same G slots and measure the same workload twice — masked
 (active slots gathered into a dense sub-arena) — which is the ROADMAP's
 idle-slot-waste item made measurable, on both the jit and kernel paths.
 
+High-G rows sweep the host-expansion engine (core.expand): the per-slot
+env.step loop vs one flattened step_batch across all slots, with a
+service_expand_speedup_G<g> row recording the expansion-phase speedup.
+
 CSV: service_<executor>_G<g>_<occupancy>, us per superstep,
      searches_per_sec=<v> (+ compaction counters on low-occupancy rows)
 """
@@ -30,7 +34,7 @@ from benchmarks.common import csv_line
 
 def _one(executor: str, G: int, p: int = 8, budget: int = 8,
          n_req: int | None = None, compact_threshold: float = 0.0,
-         tag: str = "full", X: int = 512):
+         tag: str = "full", X: int = 512, expansion: str = "loop"):
     env = BanditTreeEnv(fanout=6, terminal_depth=12)
     cfg = TreeConfig(X=X, F=6, D=8)
     n = 2 * G if n_req is None else n_req
@@ -38,7 +42,8 @@ def _one(executor: str, G: int, p: int = 8, budget: int = 8,
     def build():
         svc = SearchService(cfg, env, BanditValueBackend(), G=G, p=p,
                             executor=executor,
-                            compact_threshold=compact_threshold)
+                            compact_threshold=compact_threshold,
+                            expansion=expansion)
         for i in range(n):
             svc.submit(SearchRequest(uid=i, seed=i, budget=budget))
         return svc
@@ -55,6 +60,7 @@ def _one(executor: str, G: int, p: int = 8, budget: int = 8,
         derived += (f" compacted={svc.stats.compacted_supersteps}"
                     f"/{svc.stats.supersteps}")
     csv_line(f"service_{executor}_G{G}_{tag}", us_per_superstep, derived)
+    return svc.stats
 
 
 def run(smoke: bool = False):
@@ -70,6 +76,23 @@ def run(smoke: bool = False):
         for tag, thresh in (("low_masked", 0.0), ("low_compacted", 0.5)):
             _one(executor, G, p=p, budget=budget, X=X,
                  n_req=max(1, G // 4), compact_threshold=thresh, tag=tag)
+
+    # host-expansion engine at high G: per-slot env.step loop vs ONE
+    # flattened step_batch over all slots (core.expand) — the ROADMAP
+    # "host expansion is the next hot spot once G*p grows" row.  The
+    # speedup row compares the expansion phase itself (stats.t_expand).
+    G = 4 if smoke else 16
+    per_mode = {}
+    for expansion in ("loop", "vector"):
+        stats = _one("faithful", G, p=p, budget=budget, X=X,
+                     expansion=expansion, tag=f"expand_{expansion}")
+        per_mode[expansion] = (
+            stats.t_expand / max(stats.supersteps, 1) * 1e6)
+    lo, ve = per_mode["loop"], per_mode["vector"]
+    csv_line(f"service_expand_speedup_G{G}", ve,
+             f"loop_us_per_superstep={lo:.1f} "
+             f"vector_us_per_superstep={ve:.1f} "
+             f"expansion_speedup={lo / max(ve, 1e-9):.2f}x")
 
 
 if __name__ == "__main__":

@@ -10,8 +10,17 @@ decays and the scheduler switches from masked execution to gathering the
 active slots into a dense sub-arena (watch the per-superstep decision
 trace).
 
+Host expansion runs through the batched engine (core.expand): with
+--expansion vector (the default here) every occupied slot's pending
+expansions are flattened into ONE env.step_batch call per superstep
+instead of a per-slot, per-worker Python loop; --expansion pool serves
+the same batch from a process pool of scalar-env workers (for envs with
+no vectorized form), and --expansion loop is the original reference
+path.  All three are bit-identical (tests/test_executor_matrix.py).
+
   PYTHONPATH=src python examples/service_demo.py
   PYTHONPATH=src python examples/service_demo.py --executor pallas
+  PYTHONPATH=src python examples/service_demo.py --expansion loop
 """
 
 import argparse
@@ -29,6 +38,11 @@ def main():
                     default="faithful",
                     help="in-tree executor: vmapped jit arena (faithful) "
                          "or the arena-native [G]-grid Pallas kernels")
+    ap.add_argument("--expansion", choices=("loop", "vector", "pool"),
+                    default="vector",
+                    help="host-expansion engine: per-worker env.step loop, "
+                         "one flattened step_batch across all slots "
+                         "(vector), or a process pool of scalar workers")
     args = ap.parse_args()
 
     env = BanditTreeEnv(fanout=6, terminal_depth=12)
@@ -39,6 +53,7 @@ def main():
         p=16,                    # workers (simulations) per tree per superstep
         executor=args.executor,  # unified stack ("reference" = numpy oracle)
         compact_threshold=0.5,   # opt-in: gather active slots when <= half
+        expansion=args.expansion,  # batched host expansion (core.expand)
     )                            # the arena is occupied (see scheduler docs)
 
     for i in range(12):

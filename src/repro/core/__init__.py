@@ -3,6 +3,9 @@ from repro.core.executor import (
     InTreeExecutor, JaxExecutor, PallasExecutor, ReferenceExecutor,
     make_intree_executor,
 )
+from repro.core.expand import (
+    EXPANSION_MODES, ExpansionEngine, HostExpansion, host_expand_phase,
+)
 from repro.core.mcts import TreeParallelMCTS, RolloutBackend, make_executor
 from repro.core.state_table import StateTable
 from repro.core import fixedpoint, intree, ref_sequential, scoring
@@ -11,5 +14,7 @@ __all__ = [
     "TreeConfig", "UCTree", "init_tree", "NULL", "TreeParallelMCTS",
     "RolloutBackend", "InTreeExecutor", "JaxExecutor", "PallasExecutor",
     "ReferenceExecutor", "make_executor", "make_intree_executor",
+    "EXPANSION_MODES", "ExpansionEngine", "HostExpansion",
+    "host_expand_phase",
     "StateTable", "fixedpoint", "intree", "ref_sequential", "scoring",
 ]

@@ -253,7 +253,8 @@ def _assign_expansions(cfg, tree, pn, pa, depths, leaves, p):
     _, _, _, ea, ni = jax.lax.fori_loop(
         0, p, assign, (pending, claimed, budget0, ea, ni)
     )
-    insert_base = tree.size + jnp.cumsum(ni) - ni
+    # dtype pinned: cumsum of i32 widens to i64 under JAX_ENABLE_X64
+    insert_base = tree.size + jnp.cumsum(ni, dtype=i32) - ni
     return tree, SelectionResult(pn, pa, depths, leaves, ea, ni, insert_base)
 
 
@@ -285,8 +286,8 @@ def insert_batch(cfg: TreeConfig, tree: UCTree, sel: SelectionResult):
         tree.node_depth[sel.leaves][:, None] + 1, mode="drop")
     num_actions = tree.num_actions.at[ci].set(i32(cfg.F), mode="drop")
     num_expanded = tree.num_expanded.at[jnp.where(valid, leaf, X)].add(
-        jnp.where(valid, 1, 0), mode="drop")
-    size = tree.size + jnp.sum(sel.n_insert)
+        jnp.where(valid, i32(1), i32(0)), mode="drop")
+    size = tree.size + jnp.sum(sel.n_insert, dtype=i32)
     new_nodes = jnp.where(valid, nid, NULL)
     tree = dataclasses.replace(
         tree, child=child, node_depth=node_depth,
@@ -365,7 +366,7 @@ def backup_batch(
     edge_VL = tree.edge_VL.at[li, ai].add(-rinc, mode="drop")
     node_N = tree.node_N.at[li].add(ninc, mode="drop")
     node_O = tree.node_O.at[li].add(-rinc, mode="drop")
-    node_N = node_N.at[sel.leaves].add(jnp.where(alive, 1, 0))
+    node_N = node_N.at[sel.leaves].add(jnp.where(alive, i32(1), i32(0)))
     node_O = node_O.at[sel.leaves].add(-1)
 
     # Expansion edges (single-expand mode): seed the sim node's in-edge.

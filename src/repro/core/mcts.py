@@ -34,6 +34,9 @@ from repro.core import fixedpoint as fx
 from repro.core.executor import (
     InTreeExecutor, ReferenceExecutor, make_intree_executor,
 )
+from repro.core.expand import (  # noqa: F401  (re-export: long-standing home)
+    ExpansionEngine, HostExpansion, encode_prior_rows, host_expand_phase,
+)
 from repro.core.state_table import StateTable
 from repro.core.tree import NULL, TreeConfig, UCTree
 
@@ -99,96 +102,11 @@ def make_executor(cfg: TreeConfig, name: str) -> InTreeExecutor:
 
 
 # --------------------------------------------------------------------------
-# Host expansion phase (shared by the single-tree driver and service/)
+# Host expansion phase — lives in core.expand (HostExpansion /
+# host_expand_phase / ExpansionEngine are re-exported above: the engine is
+# shared by this G=1 driver and service/scheduler.py, which batches every
+# slot's pending expansions into one VectorEnv.step_batch call)
 # --------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class HostExpansion:
-    """Result of the host half of Expansion for one tree's superstep:
-    1-step env transitions for every expanding worker, ST writes done,
-    metadata queued for finalize, and the simulation batch rows."""
-
-    sim_nodes: Any       # [p] i32 node each simulation runs from
-    sim_states: Any      # [p, ...] states for SimulationBackend.evaluate
-    fin_nodes: list      # inserted node ids (ragged)
-    fin_na: list         # their legal-action counts
-    fin_term: list       # their terminal flags
-    prior_parents: list  # parents receiving prior rows (expand-all mode)
-    prior_workers: list  # worker index whose sim state produced each prior
-
-    def padded_finalize_args(self, K: int, p: int, Fp: int, priors) -> tuple:
-        """Fixed-shape NULL-padded finalize arguments: every slot must
-        contribute identical shapes to the arena finalize (the G=1 driver
-        uses the same convention with a leading [1] axis)."""
-        nodes = np.full(K, NULL, np.int32)
-        na = np.zeros(K, np.int32)
-        term = np.zeros(K, np.int32)
-        k = len(self.fin_nodes)
-        nodes[:k] = self.fin_nodes
-        na[:k] = self.fin_na
-        term[:k] = self.fin_term
-        pp = np.full(p, NULL, np.int32)
-        pf = np.zeros((p, Fp), np.int32)
-        if priors is not None and self.prior_workers:
-            pp[: len(self.prior_parents)] = self.prior_parents
-            pf[: len(self.prior_workers)] = encode_prior_rows(
-                priors, self.prior_workers, Fp)
-        return nodes, na, term, pp, pf
-
-
-def encode_prior_rows(priors, prior_workers, Fp: int) -> np.ndarray:
-    """Select the expand-all workers' prior rows and pad to Fp lanes
-    (Qm.16).  Priors are produced for the leaf states that expanded-all —
-    sim node == leaf for those workers."""
-    pr = np.asarray(priors)[prior_workers]
-    padded = np.zeros((len(prior_workers), Fp), np.float32)
-    padded[:, : pr.shape[1]] = pr
-    return np.asarray(fx.encode(padded), np.int32)
-
-
-def host_expand_phase(env: Environment, st: StateTable, sel: dict,
-                      new_nodes: np.ndarray) -> HostExpansion:
-    """ST reads, 1-step env transitions, ST writes (paper Alg. 2 step 3).
-
-    Sync-free by the paper's §III-B invariant: every write targets a
-    distinct freshly inserted node id.  `sel` is the host-side selection
-    dict; `new_nodes` is the [p, Fp] id block from Node Insertion."""
-    p = sel["leaves"].shape[0]
-    leaves = sel["leaves"]
-    leaf_states = st.read(leaves)
-    sim_nodes = leaves.copy()
-    sim_states = leaf_states.copy()
-    out = HostExpansion(sim_nodes, sim_states, [], [], [], [], [])
-    for j in range(p):
-        ea = int(sel["expand_action"][j])
-        if ea == NULL:
-            continue
-        if ea == -2:  # expand-all (Gomoku benchmark mode)
-            k = int(sel["n_insert"][j])
-            states, nas, terms = [], [], []
-            for a in range(k):
-                s2, _, term = env.step(leaf_states[j], a)
-                states.append(s2)
-                nas.append(0 if term else env.num_actions(s2))
-                terms.append(int(term))
-            ids = new_nodes[j, :k]
-            st.write(ids, np.stack(states))
-            out.fin_nodes += list(ids)
-            out.fin_na += nas
-            out.fin_term += terms
-            out.prior_parents.append(int(leaves[j]))
-            out.prior_workers.append(j)
-        else:
-            s2, _, term = env.step(leaf_states[j], ea)
-            nid = int(new_nodes[j, 0])
-            st.write(np.array([nid]), s2[None])
-            out.fin_nodes.append(nid)
-            out.fin_na.append(0 if term else env.num_actions(s2))
-            out.fin_term.append(int(term))
-            out.sim_nodes[j] = nid
-            out.sim_states[j] = s2
-    return out
-
 
 # --------------------------------------------------------------------------
 # Driver
@@ -230,10 +148,12 @@ class TreeParallelMCTS:
         executor: str = "faithful",
         alternating_signs: bool = False,
         seed: int = 0,
+        expansion: str = "loop",
     ):
         self.cfg, self.env, self.sim, self.p = cfg, env, sim, p
         self.alternating_signs = alternating_signs
         self.exec = make_intree_executor(cfg, 1, executor)
+        self.expander = ExpansionEngine(env, expansion)
         self.st = StateTable(cfg.X, env.state_shape, env.state_dtype)
         # fixed finalize width (the arena finalize takes one shape per slot)
         self.K = p * cfg.Fp if cfg.expand_all else p
@@ -277,7 +197,7 @@ class TreeParallelMCTS:
 
         # --- host: ST reads + 1-step sims + ST writes (sync-free) ---
         t4 = time.perf_counter()
-        hx = host_expand_phase(self.env, st, slot_sel, new_nodes[0])
+        hx = self.expander.expand([(0, st, slot_sel, new_nodes[0])])[0]
         sim_nodes = hx.sim_nodes
         t5 = time.perf_counter()
 
@@ -354,3 +274,7 @@ class TreeParallelMCTS:
 
     def _size(self):
         return self.tree.size
+
+    def close(self):
+        """Release expansion-engine resources (process pool, if any)."""
+        self.expander.close()

@@ -1,6 +1,8 @@
 from repro.envs.bandit_tree import BanditTreeEnv, BanditValueBackend
 from repro.envs.ponglite import PongLiteEnv
 from repro.envs.gomoku import GomokuEnv, GomokuRolloutBackend
+from repro.envs.vector import PoolVectorEnv, VectorEnv, has_vector_env
 
 __all__ = ["BanditTreeEnv", "BanditValueBackend", "PongLiteEnv", "GomokuEnv",
-           "GomokuRolloutBackend"]
+           "GomokuRolloutBackend", "PoolVectorEnv", "VectorEnv",
+           "has_vector_env"]

@@ -22,6 +22,17 @@ def _hash(h: int, a: int) -> int:
     return int(x & 0xFFFFFF)
 
 
+def _hash_batch(h: np.ndarray, a) -> np.ndarray:
+    """Vectorized _hash: uint64 wrap-around arithmetic is exactly the
+    scalar's mod-2^64 masking, element for element."""
+    h = np.asarray(h).astype(np.uint64)
+    a = np.broadcast_to(np.asarray(a), h.shape).astype(np.uint64)
+    x = h ^ (a + np.uint64(0x9E3779B97F4A7C15) + (h << np.uint64(6)))
+    x = x * np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(31)
+    return (x & np.uint64(0xFFFFFF)).astype(np.int64)
+
+
 class BanditValueBackend:
     """Deterministic per-state simulation backend.
 
@@ -81,3 +92,32 @@ class BanditTreeEnv:
         # dense shaped reward in [-0.5, 0.5], deterministic per transition
         r = (_hash(h2, 999) % 1000) / 1000.0 - 0.5
         return s, float(r), term
+
+    # ---- VectorEnv (envs.vector): batched twin, bit-identical to step ----
+
+    def _na_batch(self, h: np.ndarray, depth: np.ndarray) -> np.ndarray:
+        if self.varying_fanout:
+            na = 1 + _hash_batch(h, 7777) % self.F
+        else:
+            na = np.full(len(h), self.F, np.int64)
+        return np.where(depth >= self.terminal_depth, 0, na)
+
+    def num_actions_batch(self, states: np.ndarray) -> np.ndarray:
+        return np.asarray(states)[:, 3].astype(np.int64)
+
+    def step_batch(self, states: np.ndarray, actions: np.ndarray):
+        states = np.asarray(states, np.float32)
+        a = np.asarray(actions).astype(np.int64)
+        d = states[:, 0].astype(np.int64)
+        h = states[:, 1].astype(np.int64)
+        na = self._na_batch(h, d)
+        assert ((a >= 0) & (a < na)).all(), "illegal action in batch"
+        h2, d2 = _hash_batch(h, a), d + 1
+        term = d2 >= self.terminal_depth
+        s = np.zeros((len(a), 8), np.float32)
+        s[:, 0] = d2
+        s[:, 1] = h2
+        s[:, 2] = term
+        s[:, 3] = self._na_batch(h2, d2)
+        r = (_hash_batch(h2, 999) % 1000) / 1000.0 - 0.5
+        return s, r, term

@@ -67,6 +67,62 @@ class GomokuEnv:
         s[0] = -player
         return s, float(reward), bool(s[1])
 
+    # ---- VectorEnv (envs.vector): batched twin, bit-identical to step ----
+
+    def num_actions_batch(self, states: np.ndarray) -> np.ndarray:
+        states = np.asarray(states, np.float32)
+        empties = (states[:, 3 : 3 + _CELLS] == 0).sum(1)
+        return np.where(states[:, 1] != 0, 0, empties).astype(np.int64)
+
+    def step_batch(self, states: np.ndarray, actions: np.ndarray):
+        s = np.asarray(states, np.float32).copy()
+        a = np.asarray(actions).astype(np.int64)
+        B = len(s)
+        assert not s[:, 1].any(), "step_batch on terminal state"
+        board = s[:, 3 : 3 + _CELLS]            # view: writes land in s
+        empty = board == 0
+        n_empty = empty.sum(1)
+        assert ((a >= 0) & (a < n_empty)).all(), "illegal action in batch"
+        # the a-th empty cell in row-major order, per row
+        target = empty & (np.cumsum(empty, axis=1) == (a + 1)[:, None])
+        cell = target.argmax(1)
+        player = s[:, 0].copy()
+        rows = np.arange(B)
+        board[rows, cell] = player
+        r, c = np.divmod(cell, _BOARD)
+        win = _wins_batch(board.reshape(B, _BOARD, _BOARD), r, c, player)
+        draw = ~win & (n_empty == 1)            # move filled the last cell
+        terminal = win | draw
+        s[:, 1] = terminal
+        s[:, 2] = np.where(win, player, 0.0)
+        s[:, 0] = -player
+        reward = np.where(win, 1.0, 0.0)        # mover's perspective
+        return s, reward, terminal
+
+
+def _wins_batch(boards: np.ndarray, r: np.ndarray, c: np.ndarray,
+                player: np.ndarray) -> np.ndarray:
+    """Batched _wins: contiguous-run length through the placed cell per
+    direction, counted with a bounded offset sweep (runs longer than _WIN
+    still win, exactly as the scalar while-loop)."""
+    B = len(r)
+    rows = np.arange(B)
+    win = np.zeros(B, bool)
+    for dr, dc in ((0, 1), (1, 0), (1, 1), (1, -1)):
+        n = np.ones(B, np.int64)
+        for sgn in (1, -1):
+            alive = np.ones(B, bool)
+            for i in range(1, _WIN):
+                rr = r + sgn * dr * i
+                cc = c + sgn * dc * i
+                inb = (rr >= 0) & (rr < _BOARD) & (cc >= 0) & (cc < _BOARD)
+                val = boards[rows, np.clip(rr, 0, _BOARD - 1),
+                             np.clip(cc, 0, _BOARD - 1)]
+                alive &= inb & (val == player)
+                n += alive
+        win |= n >= _WIN
+    return win
+
 
 def _wins(board: np.ndarray, r: int, c: int, player: float) -> bool:
     for dr, dc in ((0, 1), (1, 0), (1, 1), (1, -1)):

@@ -72,3 +72,38 @@ class PongLiteEnv:
         if s[5] >= self.max_t:
             s[6] = 1.0
         return s, float(reward), bool(s[6])
+
+    # ---- VectorEnv (envs.vector): batched twin, bit-identical to step ----
+    # All arithmetic stays in f32 exactly as the scalar path (same ops on
+    # the same dtype in the same order), so the results match bit for bit.
+
+    def num_actions_batch(self, states: np.ndarray) -> np.ndarray:
+        return np.where(np.asarray(states, np.float32)[:, 6] != 0, 0, 6
+                        ).astype(np.int64)
+
+    def step_batch(self, states: np.ndarray, actions: np.ndarray):
+        s = np.asarray(states, np.float32).copy()
+        a = np.asarray(actions).astype(np.int64)
+        assert not s[:, 6].any(), "step_batch on terminal state"
+        assert ((a >= 0) & (a < 6)).all(), "illegal action in batch"
+        s[:, 4] = np.clip(s[:, 4] + self._PADDLE_V[a], 0.1, 0.9)
+        s[:, 0] += s[:, 2]
+        s[:, 1] += s[:, 3]
+        bounce = (s[:, 1] < 0.0) | (s[:, 1] > 1.0)   # top/bottom bounce
+        s[bounce, 3] = -s[bounce, 3]
+        s[bounce, 1] = np.clip(s[bounce, 1], 0.0, 1.0)
+        left = s[:, 0] < 0.0                         # left wall bounce
+        s[left, 2] = -s[left, 2]
+        s[left, 0] = 0.0
+        plane = s[:, 0] >= 1.0                       # reaches paddle plane
+        hit = plane & (np.abs(s[:, 1] - s[:, 4]) < 0.12)
+        miss = plane & ~hit
+        s[hit, 7] += 1
+        s[hit, 2] = -np.abs(s[hit, 2])
+        s[hit, 3] += np.float32(0.25) * (s[hit, 1] - s[hit, 4])  # english
+        s[hit, 0] = 1.0
+        s[miss, 6] = 1.0
+        reward = np.where(hit, 1.0, np.where(miss, -1.0, 0.0))
+        s[:, 5] += 1
+        s[s[:, 5] >= self.max_t, 6] = 1.0
+        return s, reward, s[:, 6] != 0

@@ -88,6 +88,15 @@ def unpack_nodes_arena(packed, x: int):
 
 # ---- in-kernel access helpers (all row-granular) -------------------------
 
+def canonical_index(i):
+    """dynamic_slice / dslice starts must all share one dtype, and literal
+    starts (the 0 hidden in a full slice) canonicalize to jax's index
+    dtype — i64 under JAX_ENABLE_X64, i32 otherwise.  Traced starts must
+    follow, or mixed index tuples fail to trace under the x64 CI leg."""
+    dt = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    return jnp.asarray(i, dt)
+
+
 def lane_iota():
     """[1, 128] lane indices (2-D: 1-D iota does not lower on TPU)."""
     return jax.lax.broadcasted_iota(jnp.int32, (1, LANES), 1)
@@ -95,17 +104,19 @@ def lane_iota():
 
 def load_row(ref, row):
     """One 128-lane row as [1, 128]."""
-    return pl.load(ref, (pl.dslice(row, 1), slice(None)))
+    return pl.load(ref, (pl.dslice(canonical_index(row), 1), slice(None)))
 
 
 def store_row(ref, row, val):
-    pl.store(ref, (pl.dslice(row, 1), slice(None)), val)
+    pl.store(ref, (pl.dslice(canonical_index(row), 1), slice(None)), val)
 
 
 def sload(ref, idx):
     """Scalar load from a packed node array."""
     row = load_row(ref, idx // LANES)
-    return jax.lax.dynamic_slice(row, (0, idx % LANES), (1, 1))[0, 0]
+    return jax.lax.dynamic_slice(
+        row, (canonical_index(0), canonical_index(idx % LANES)), (1, 1)
+    )[0, 0]
 
 
 def sadd(ref, idx, inc):
@@ -118,4 +129,5 @@ def sadd(ref, idx, inc):
 
 def extract_lane(vec_1x128, lane):
     """vec[0, lane] for traced lane index."""
-    return jax.lax.dynamic_slice(vec_1x128, (0, lane), (1, 1))[0, 0]
+    return jax.lax.dynamic_slice(
+        vec_1x128, (canonical_index(0), canonical_index(lane)), (1, 1))[0, 0]

@@ -25,6 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import canonical_index
+
 NEG = -2.0e38
 
 
@@ -42,8 +44,17 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, causal, window, scale,
 
     def body(kj, carry):
         m_run, l_run, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(kj * blk_k, blk_k), slice(None)))
-        v = pl.load(v_ref, (0, pl.dslice(kj * blk_k, blk_k), slice(None)))
+        # leading axis indexed with a length-1 dslice, not a bare int: the
+        # interpreter's load-discharge rule rejects scalar ints in a mixed
+        # index tuple (every 16-case sweep in tests/test_flash_kernel.py
+        # crashed on it; kernel numerics were never the problem).  Starts
+        # go through canonical_index so the tuple stays one dtype under
+        # JAX_ENABLE_X64.
+        kstart = canonical_index(kj * blk_k)
+        k = pl.load(k_ref, (pl.dslice(canonical_index(0), 1),
+                            pl.dslice(kstart, blk_k), slice(None)))[0]
+        v = pl.load(v_ref, (pl.dslice(canonical_index(0), 1),
+                            pl.dslice(kstart, blk_k), slice(None)))[0]
         s = q @ k.astype(jnp.float32).T                      # [blk_q, blk_k]
         kpos = kj * blk_k + jax.lax.broadcasted_iota(
             jnp.int32, (blk_q, blk_k), 1)
@@ -81,7 +92,9 @@ def flash_attention(q, k, v, *, causal=True, window=None,
     B, Sq, H, dh = q.shape
     Sk, Hkv = k.shape[1], k.shape[2]
     g = H // Hkv
-    scale = 1.0 / np.sqrt(dh)
+    # weak python float, not an np.float64 scalar: a strong f64 scale
+    # would widen the whole online-softmax carry under JAX_ENABLE_X64
+    scale = float(1.0 / np.sqrt(dh))
 
     nq = -(-Sq // blk_q)
     nk = -(-Sk // blk_k)

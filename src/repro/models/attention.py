@@ -21,6 +21,8 @@ makes ring buffers safe.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -37,19 +39,19 @@ BLOCK_K = 512
 def init_attn(cfg, key, spec):
     d, H, Hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
     ks = jax.random.split(key, 8)
-    s = 1.0 / np.sqrt(d)
-    so = 1.0 / np.sqrt(H * dh)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(H * dh)
     if cfg.attn_impl == "mla":
         qh = cfg.qk_nope_dim + cfg.qk_rope_dim
         p = {
             "wq_a": jax.random.normal(ks[0], (d, cfg.q_lora_rank), L.dt(cfg)) * s,
             "wq_b": jax.random.normal(ks[1], (cfg.q_lora_rank, H, qh), L.dt(cfg))
-            * (1.0 / np.sqrt(cfg.q_lora_rank)),
+            * (1.0 / math.sqrt(cfg.q_lora_rank)),
             "wkv_a": jax.random.normal(
                 ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), L.dt(cfg)) * s,
             "wkv_b": jax.random.normal(
                 ks[3], (cfg.kv_lora_rank, H, cfg.qk_nope_dim + cfg.v_head_dim),
-                L.dt(cfg)) * (1.0 / np.sqrt(cfg.kv_lora_rank)),
+                L.dt(cfg)) * (1.0 / math.sqrt(cfg.kv_lora_rank)),
             "wo": jax.random.normal(ks[4], (H, cfg.v_head_dim, d), L.dt(cfg)) * so,
         }
         a = {
@@ -119,7 +121,7 @@ def naive_attention(q, k, v, *, causal, window=None, prefix=0,
     (paligemma image prefix).  q_offset: absolute position of q[0] relative
     to k[0] (decode).  kv_valid: [B, Sk] bool mask of valid cache slots.
     """
-    scale = scale or (1.0 / np.sqrt(q.shape[-1]))
+    scale = scale or (1.0 / math.sqrt(q.shape[-1]))
     s = _gqa_scores(q * scale, k)
     Sq, Sk = s.shape[-2], s.shape[-1]
     qpos = jnp.arange(Sq) + q_offset
@@ -142,7 +144,7 @@ def blockwise_attention(q, k, v, *, causal=True, window=None, prefix=0,
                         scale=None):
     """Flash-style attention in jnp: scan over KV blocks with an online
     softmax.  Windowed layers visit only in-window KV blocks."""
-    scale = scale or (1.0 / np.sqrt(q.shape[-1]))
+    scale = scale or (1.0 / math.sqrt(q.shape[-1]))
     B, S, H, dh = q.shape
     Sk = k.shape[1]
     dhv = v.shape[-1]
@@ -314,7 +316,7 @@ def _decode_attend(cfg, spec, q, cache, positions):
         valid &= slot_pos > curb - spec.window
     valid = jnp.broadcast_to(valid, (B, buf)) if valid.ndim == 2 \
         else jnp.broadcast_to(valid[None], (B, buf))
-    scale = 1.0 / np.sqrt(q.shape[-1])
+    scale = 1.0 / math.sqrt(q.shape[-1])
     s = _gqa_scores(q * scale, cache["k"])            # [B,H,1,buf]
     s = jnp.where(valid[:, None, None, :], s, NEG)
     p_attn = jax.nn.softmax(s, axis=-1)
@@ -395,7 +397,7 @@ def _mla_forward(cfg, spec, p, x, positions, cache, impl):
             w_nope = p["wkv_b"][..., :nope]              # [rkv, H, nope]
             w_v = p["wkv_b"][..., nope:]                 # [rkv, H, dv]
             q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, w_nope)
-            scale = 1.0 / np.sqrt(nope + rr)
+            scale = 1.0 / math.sqrt(nope + rr)
             s_lat = jnp.einsum("bshr,btr->bhst", q_abs, c_all,
                                preferred_element_type=jnp.float32)
             s_rope = jnp.einsum("bshk,btk->bhst", q_rope, kr_all,
@@ -422,11 +424,11 @@ def _mla_forward(cfg, spec, p, x, positions, cache, impl):
         ok = (slot_pos <= cur[..., None]) & (slot_pos >= 0)
         ok = jnp.broadcast_to(ok if ok.ndim == 2 else ok[None], (B, buf))
         out = naive_attention(q, k, v, causal=False, kv_valid=ok,
-                              scale=1.0 / np.sqrt(nope + rr))
+                              scale=1.0 / math.sqrt(nope + rr))
     elif impl == "naive" or S <= 2048:
         out = naive_attention(q, k, v, causal=True,
-                              scale=1.0 / np.sqrt(nope + rr))
+                              scale=1.0 / math.sqrt(nope + rr))
     else:
         out = blockwise_attention(q, k, v, causal=True,
-                                  scale=1.0 / np.sqrt(nope + rr))
+                                  scale=1.0 / math.sqrt(nope + rr))
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache

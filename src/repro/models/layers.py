@@ -8,6 +8,8 @@ names per array dim — consumed by models.sharding to build NamedShardings
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -54,8 +56,8 @@ def act_fn(cfg):
 def init_mlp(cfg, key, d_ff=None):
     d, f = cfg.d_model, d_ff or cfg.d_ff
     k1, k2, k3 = jax.random.split(key, 3)
-    s_in = 1.0 / np.sqrt(d)
-    s_out = 1.0 / np.sqrt(f)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(f)
     p = {"wi": jax.random.normal(k1, (d, f), dt(cfg)) * s_in,
          "wo": jax.random.normal(k2, (f, d), dt(cfg)) * s_out}
     a = {"wi": ("embed", "mlp"), "wo": ("mlp", "embed")}

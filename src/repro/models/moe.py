@@ -16,6 +16,8 @@ variant is a §Perf hillclimb.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -27,7 +29,7 @@ from repro.models import sharding as sh
 def init_moe(cfg, key):
     d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
     ks = jax.random.split(key, 5)
-    s_in, s_out = 1.0 / np.sqrt(d), 1.0 / np.sqrt(f)
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
     p = {
         "router": jax.random.normal(ks[0], (d, e), jnp.float32) * s_in,
         "wi": jax.random.normal(ks[1], (e, d, f), L.dt(cfg)) * s_in,

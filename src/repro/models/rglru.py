@@ -16,6 +16,8 @@ bounded windows this is what qualifies the arch for long_500k.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -29,19 +31,19 @@ def init_rglru(cfg, key):
     d = cfg.d_model
     w = cfg.lru_width or d
     ks = jax.random.split(key, 6)
-    s = 1.0 / np.sqrt(d)
+    s = 1.0 / math.sqrt(d)
     p = {
         "in_x": jax.random.normal(ks[0], (d, w), L.dt(cfg)) * s,
         "in_gate": jax.random.normal(ks[1], (d, w), L.dt(cfg)) * s,
         "conv": {"w": jax.random.normal(ks[2], (cfg.conv_width, w),
                                         jnp.float32) * 0.1,
                  "b": jnp.zeros((w,), jnp.float32)},
-        "wa": jax.random.normal(ks[3], (w, w), jnp.float32) * (1.0 / np.sqrt(w)),
+        "wa": jax.random.normal(ks[3], (w, w), jnp.float32) * (1.0 / math.sqrt(w)),
         "ba": jnp.zeros((w,), jnp.float32),
-        "wx": jax.random.normal(ks[4], (w, w), jnp.float32) * (1.0 / np.sqrt(w)),
+        "wx": jax.random.normal(ks[4], (w, w), jnp.float32) * (1.0 / math.sqrt(w)),
         "bx": jnp.zeros((w,), jnp.float32),
         "lam": jnp.ones((w,), jnp.float32),  # softplus(1) ~ 1.31 -> a in (0,1)
-        "out": jax.random.normal(ks[5], (w, d), L.dt(cfg)) * (1.0 / np.sqrt(w)),
+        "out": jax.random.normal(ks[5], (w, d), L.dt(cfg)) * (1.0 / math.sqrt(w)),
     }
     a = {
         "in_x": ("embed", "mlp"), "in_gate": ("embed", "mlp"),

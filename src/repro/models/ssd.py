@@ -12,6 +12,8 @@ fp32.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -23,7 +25,7 @@ def init_ssd(cfg, key):
     d = cfg.d_model
     di, ns, nh = cfg.ssd_d_inner, cfg.ssd_state, cfg.ssd_n_heads
     ks = jax.random.split(key, 4)
-    s = 1.0 / np.sqrt(d)
+    s = 1.0 / math.sqrt(d)
     conv_ch = di + 2 * ns
     p = {
         "in_proj": jax.random.normal(
@@ -34,7 +36,7 @@ def init_ssd(cfg, key):
         "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
         "dt_bias": jnp.zeros((nh,), jnp.float32),
         "D": jnp.ones((nh,), jnp.float32),
-        "out_proj": jax.random.normal(ks[2], (di, d), L.dt(cfg)) * (1.0 / np.sqrt(di)),
+        "out_proj": jax.random.normal(ks[2], (di, d), L.dt(cfg)) * (1.0 / math.sqrt(di)),
     }
     a = {
         "in_proj": ("embed", "mlp"),

@@ -44,7 +44,8 @@ import numpy as np
 
 from repro.core import fixedpoint as fx
 from repro.core import reroot
-from repro.core.mcts import Environment, SimulationBackend, host_expand_phase
+from repro.core.expand import ExpansionEngine
+from repro.core.mcts import Environment, SimulationBackend
 from repro.core.state_table import StateTable
 from repro.core.tree import NULL, TreeConfig
 from repro.service.arena import make_arena_executor
@@ -98,6 +99,7 @@ class ServiceStats:
     occupancy_sum: float = 0.0     # sum of per-superstep A/G (avg = /supersteps)
     t_intree: float = 0.0        # select + insert + finalize + backup
     t_host: float = 0.0          # ST / env expansion + scheduling bookkeeping
+    t_expand: float = 0.0        # expansion-engine share of t_host
     t_sim: float = 0.0
 
 
@@ -115,11 +117,16 @@ class SearchService:
         alternating_signs: bool = False,
         reuse_subtree: bool = True,
         compact_threshold: float = 0.0,
+        expansion: str = "loop",
     ):
         self.cfg, self.env, self.sim = cfg, env, sim
         self.G, self.p = G, p
         self.alternating_signs = alternating_signs
         self.reuse_subtree = reuse_subtree
+        # host-expansion engine: "loop" per-worker env.step, "vector" ONE
+        # flattened step_batch over all slots' pending expansions, "pool"
+        # the process-pool scalar fallback (core.expand) — bit-identical
+        self.expander = ExpansionEngine(env, expansion)
         # occupancy A/G at or below this gathers active slots into a dense
         # sub-arena for the device phases.  Opt-in (0.0 = always masked):
         # BENCH_service.json shows the per-superstep gather/scatter costs
@@ -198,12 +205,14 @@ class SearchService:
         new_nodes = ex.insert(ex_active, sel_dev)             # [Ge, p, Fp]
         t1 = time.perf_counter()
 
-        # host expansion per slot, then ONE fused Simulation batch
-        hx = {}
-        for r, g in zip(rows, act_idx):
-            slot_sel = {k: v[r] for k, v in sel.items()}
-            hx[g] = host_expand_phase(self.env, self.sts[g], slot_sel,
-                                      new_nodes[r])
+        # host expansion: every slot's pending expansions through the
+        # engine (one flattened env batch in vector/pool mode), then ONE
+        # fused Simulation batch
+        hx = self.expander.expand(
+            [(g, self.sts[g], {k: v[r] for k, v in sel.items()},
+              new_nodes[r]) for r, g in zip(rows, act_idx)])
+        t_x = time.perf_counter()
+        self.stats.t_expand += t_x - t1
         fused = np.concatenate([hx[g].sim_states for g in act_idx])
         t2 = time.perf_counter()
         values, priors = self.sim.evaluate(fused)
@@ -311,3 +320,7 @@ class SearchService:
             if not self.superstep():
                 break
         return self.completed
+
+    def close(self):
+        """Release expansion-engine resources (process pool, if any)."""
+        self.expander.close()

@@ -1,0 +1,165 @@
+"""Cross-executor differential harness.
+
+One randomized service schedule — oversubscribed admissions, staggered
+evictions, multi-move requests advancing via reroot — is replayed through
+EVERY in-tree executor x {masked, compacted} x {loop, vector, pool}
+expansion and compared per slot, bit for bit.
+
+Two claims, split by executor class:
+
+  * bit-compatible executors (reference / faithful / pallas) must
+    reproduce the sequential numpy oracle exactly under every combo;
+  * relaxed/wavefront change intra-superstep semantics BY DESIGN (they
+    diverge from the oracle), but compaction and the expansion engine are
+    still required to be pure transforms: every combo must equal that
+    executor's own masked/loop run bit for bit.
+
+The executor axis is EXECUTOR_NAMES from core.executor, so a newly
+registered executor is enrolled in the whole matrix automatically — a new
+name shows up here (and must declare itself in BIT_COMPATIBLE if it
+claims oracle equality).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import TreeConfig
+from repro.core.executor import EXECUTOR_NAMES
+from repro.envs import BanditTreeEnv, BanditValueBackend
+from repro.service import SearchRequest, SearchService
+
+CFG = TreeConfig(X=160, F=4, D=6)
+ENV = BanditTreeEnv(fanout=4, terminal_depth=10)
+G, P = 3, 4
+
+# Executors whose per-slot arithmetic is bit-compatible with the
+# sequential numpy oracle.  relaxed/wavefront are intentionally absent
+# (documented intra-superstep semantics change); everything else MUST be
+# listed — a new executor that skips this list still gets the
+# self-consistency matrix but not the oracle gate.
+BIT_COMPATIBLE = ("reference", "faithful", "pallas")
+
+ORACLE = ("reference", 0.0, "loop")  # the paper's CPU-only master process
+
+
+def _schedule(seed=42, n=6):
+    """Randomized but reproducible request mix: oversubscribed (n > G),
+    staggered budgets (uneven eviction), multi-move (reroot path)."""
+    rng = np.random.RandomState(seed)
+    reqs = [dict(uid=i, seed=int(rng.randint(100)),
+                 budget=int(rng.randint(2, 5)),
+                 moves=int(rng.randint(1, 3)),
+                 keep_tree=True) for i in range(n)]
+    # a long tail: the last request outlives the rest, so occupancy
+    # decays through 2/G and 1/G and the compacted path really runs
+    reqs[-1].update(budget=6, moves=2)
+    return reqs
+
+
+_SCHEDULE = _schedule()
+_RESULTS: dict = {}
+
+
+def _run(executor: str, compact: float, expansion: str):
+    key = (executor, compact, expansion)
+    if key in _RESULTS:
+        return _RESULTS[key]
+    svc = SearchService(CFG, ENV, BanditValueBackend(), G=G, p=P,
+                        executor=executor, compact_threshold=compact,
+                        expansion=expansion)
+    try:
+        for kw in _SCHEDULE:
+            svc.submit(SearchRequest(**kw))
+        done = {r.uid: r for r in svc.run()}
+    finally:
+        svc.close()
+    assert sorted(done) == [kw["uid"] for kw in _SCHEDULE]
+    if compact > 0.0:
+        # the combo must actually exercise the compacted path: the tail
+        # of the schedule drains occupancy below the threshold
+        assert svc.stats.compacted_supersteps > 0
+    _RESULTS[key] = (done, svc.stats.supersteps)
+    return _RESULTS[key]
+
+
+def _assert_identical(got, want, label):
+    done_a, steps_a = got
+    done_b, steps_b = want
+    assert steps_a == steps_b, f"{label}: superstep counts diverged"
+    for uid in want[0]:
+        a, b = done_a[uid], done_b[uid]
+        assert a.actions == b.actions, f"{label} uid={uid}"
+        assert a.rewards == b.rewards, f"{label} uid={uid}"
+        assert a.supersteps == b.supersteps, f"{label} uid={uid}"
+        for va, vb in zip(a.visit_counts, b.visit_counts):
+            np.testing.assert_array_equal(va, vb,
+                                          err_msg=f"{label} uid={uid}")
+        for k in b.tree_snapshot:
+            np.testing.assert_array_equal(
+                a.tree_snapshot[k], b.tree_snapshot[k],
+                err_msg=f"{label} uid={uid} field={k}")
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+@pytest.mark.parametrize("compact", [0.0, 0.7], ids=["masked", "compacted"])
+@pytest.mark.parametrize("expansion", ["loop", "vector"])
+def test_matrix_self_consistency(executor, compact, expansion):
+    """Compaction and the expansion engine are pure transforms for every
+    executor: each combo equals the executor's masked/loop run."""
+    _assert_identical(
+        _run(executor, compact, expansion),
+        _run(executor, 0.0, "loop"),
+        f"{executor}/{'compacted' if compact else 'masked'}/{expansion}")
+
+
+@pytest.mark.parametrize("executor", [e for e in EXECUTOR_NAMES
+                                      if e in BIT_COMPATIBLE])
+@pytest.mark.parametrize("compact", [0.0, 0.7], ids=["masked", "compacted"])
+@pytest.mark.parametrize("expansion", ["loop", "vector"])
+def test_matrix_matches_sequential_oracle(executor, compact, expansion):
+    """Acceptance: every bit-compatible executor x compaction x expansion
+    combo reproduces the sequential numpy oracle per slot, bit for bit."""
+    _assert_identical(
+        _run(executor, compact, expansion),
+        _run(*ORACLE),
+        f"{executor} vs oracle")
+
+
+def test_pool_expansion_matches_oracle():
+    """The process-pool fallback is schedule- and bit-identical too (one
+    combo: spawning pools under every executor adds nothing)."""
+    _assert_identical(_run("faithful", 0.0, "pool"), _run(*ORACLE),
+                      "faithful/pool vs oracle")
+
+
+def test_expand_all_vector_matches_loop():
+    """Gomoku-style expand-all + PUCT priors through the batched engine:
+    the flattened (leaf x action) rows must reproduce the loop exactly."""
+    jax = pytest.importorskip("jax")
+    from repro.envs import GomokuEnv
+    from repro.envs.policy_net import NNSimBackend, init_params
+
+    env = GomokuEnv()
+    cfg = TreeConfig(X=128, F=36, D=5, beta=5.0, score_fn="puct",
+                     leaf_mode="unexpanded", expand_all=True)
+    backend = NNSimBackend(env, init_params(jax.random.PRNGKey(0)))
+
+    def go(expansion):
+        svc = SearchService(cfg, env, backend, G=2, p=4, executor="faithful",
+                            alternating_signs=True, expansion=expansion)
+        try:
+            for i in range(2):
+                svc.submit(SearchRequest(uid=i, seed=i, budget=3,
+                                         keep_tree=True))
+            return {r.uid: r for r in svc.run()}, svc.stats.supersteps
+        finally:
+            svc.close()
+
+    _assert_identical(go("vector"), go("loop"), "expand-all vector")
+
+
+def test_new_executors_must_enroll():
+    """Guard: the matrix derives from EXECUTOR_NAMES, so this only fires
+    if someone renames the constant away — the auto-enrolment contract."""
+    assert set(BIT_COMPATIBLE) <= set(EXECUTOR_NAMES)
+    assert {"reference", "faithful"} <= set(EXECUTOR_NAMES)

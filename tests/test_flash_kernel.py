@@ -28,12 +28,13 @@ SHAPES = [
 ]
 
 
-@pytest.mark.xfail(
-    strict=False,
-    reason="known-failing since the seed commit: the Pallas flash kernel "
-           "disagrees with naive attention on the CPU interpreter across "
-           "this whole sweep (16 cases); tracked in ROADMAP, kept running "
-           "so a fix — or a new regression pattern — is visible in CI")
+# Triage note (was a 16-case xfail sweep since the seed commit): the
+# whole sweep crashed with one genuine interpreter-mode kernel bug — a
+# bare int leading index in pl.load, rejected by the interpret-mode
+# load-discharge rule — not a tolerance problem.  With the load fixed
+# (kernels/flash_attention.py) every case passes at the original
+# tolerances (f32 max |err| ~8e-7 vs atol 2e-5, bf16 ~1.1e-2 vs 2e-2),
+# so the sweep runs as a plain strict test again.
 @pytest.mark.parametrize("shape", SHAPES, ids=str)
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("window", [None, 64])

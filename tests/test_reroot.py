@@ -104,6 +104,79 @@ def test_reroot_onto_leaf_with_null_children():
     assert (old2new != NULL).sum() == 1
 
 
+def test_reroot_with_inflight_virtual_loss_outstanding():
+    """Re-root taken mid-superstep, after Selection applied virtual loss
+    but before BackUp recovered it: the in-flight counters (edge_VL,
+    node_O) are statistics like any other and must survive extraction —
+    a driver that reroots here must not strand or invent in-flight work."""
+    env = BanditTreeEnv(fanout=4, terminal_depth=10)
+    m = TreeParallelMCTS(CFG, env, BanditValueBackend(), p=8,
+                         executor="faithful", seed=5)
+    for _ in range(6):
+        m.superstep()
+    # half a superstep: Selection marks in-flight workers, no BackUp yet
+    active = np.ones(1, bool)
+    m.exec.selection(active, p=8)
+    snap = m.exec.snapshot(m.tree)
+    assert snap["edge_VL"].sum() > 0 and snap["node_O"].sum() > 0
+
+    new_root = int(snap["child"][int(snap["root"]), 0])
+    assert new_root != NULL
+    out, old2new = reroot(CFG, snap, new_root)
+    reach = _reachable(snap["child"], new_root)
+    for old in reach:
+        new = int(old2new[old])
+        np.testing.assert_array_equal(out["edge_VL"][new],
+                                      snap["edge_VL"][old], err_msg=str(old))
+        assert out["node_O"][new] == snap["node_O"][old]
+    # in-flight totals outside the subtree are dropped with their nodes,
+    # never remapped onto survivors
+    kept_vl = sum(int(snap["edge_VL"][o].sum()) for o in reach)
+    assert int(out["edge_VL"].sum()) == kept_vl
+    kept_o = sum(int(snap["node_O"][o]) for o in reach)
+    assert int(out["node_O"].sum()) == kept_o
+
+
+def test_reroot_at_full_tree_capacity():
+    """Tree grown to the X node cap (saturated supersteps included): the
+    reroot map must stay a bijection onto the surviving subtree and free
+    real capacity for the next move."""
+    cfg = TreeConfig(X=48, F=4, D=6)
+    env = BanditTreeEnv(fanout=4, terminal_depth=10)
+    m = TreeParallelMCTS(cfg, env, BanditValueBackend(), p=8,
+                         executor="faithful", seed=1)
+    prev = 0
+    for _ in range(64):
+        m.superstep()
+        size = int(np.asarray(m.tree.size))
+        if size == prev:  # saturated: no free ids left (or all leaves dead)
+            break
+        prev = size
+    snap = m.exec.snapshot(m.tree)
+    assert int(snap["size"]) == cfg.X, "schedule must fill the tree"
+
+    root = int(snap["root"])
+    kids = [int(c) for c in snap["child"][root] if c != NULL]
+    assert kids
+    new_root = kids[0]
+    out, old2new = reroot(cfg, snap, new_root)
+    reach = _reachable(snap["child"], new_root)
+    assert int(out["size"]) == len(reach) < cfg.X  # capacity reclaimed
+    mapped = np.flatnonzero(old2new != NULL)
+    assert set(mapped.tolist()) == reach
+    assert sorted(old2new[mapped].tolist()) == list(range(len(reach)))
+    for old in reach:
+        new = int(old2new[old])
+        for k in _STAT_KEYS:
+            np.testing.assert_array_equal(out[k][new], snap[k][old],
+                                          err_msg=f"{k} old={old}")
+    # the freed region is genuinely reusable: zeroed stats, NULL links
+    n = len(reach)
+    assert (out["child"][n:] == NULL).all()
+    assert out["node_N"][n:].sum() == 0 and out["edge_N"][n:].sum() == 0
+    assert out["edge_VL"][n:].sum() == 0 and out["node_O"][n:].sum() == 0
+
+
 def test_reroot_is_idempotent_on_root():
     """Re-rooting at the current root is a pure id-compaction no-op for a
     BFS-ordered tree prefix: statistics and links survive unchanged."""
