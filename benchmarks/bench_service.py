@@ -17,6 +17,15 @@ High-G rows sweep the host-expansion engine (core.expand): the per-slot
 env.step loop vs one flattened step_batch across all slots, with a
 service_expand_speedup_G<g> row recording the expansion-phase speedup.
 
+service_persist_compact_* rows measure the compaction-session refactor:
+the same low-occupancy stable-set workload with per-superstep
+gather/scatter (the old cost model, persistent_compaction=False) vs a
+persistent device-resident CompactionSession (gather once, scatter on
+close) — the ROADMAP "compaction re-gathers every superstep" item made
+measurable.  service_hetero_* rows drive the multi-config frontend: a
+mix of two TreeConfig shape classes routed into two arena pools by
+ServiceFrontend, round-robinned to completion.
+
 CSV: service_<executor>_G<g>_<occupancy>, us per superstep,
      searches_per_sec=<v> (+ compaction counters on low-occupancy rows)
 """
@@ -27,7 +36,7 @@ import time
 
 from repro.core import TreeConfig
 from repro.envs import BanditTreeEnv, BanditValueBackend
-from repro.service import SearchRequest, SearchService
+from repro.service import SearchRequest, SearchService, ServiceFrontend
 
 from benchmarks.common import csv_line
 
@@ -63,6 +72,72 @@ def _one(executor: str, G: int, p: int = 8, budget: int = 8,
     return svc.stats
 
 
+def _persist_compact_rows(executors, G, p, budget, X):
+    """Per-superstep vs persistent compaction on a stable active set:
+    G//4 equal-budget searches admitted at once, so the membership set is
+    constant until they drain and the session path pays ONE gather."""
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    cfg = TreeConfig(X=X, F=6, D=8)
+    n = max(1, G // 4)
+    for executor in executors:
+        per_mode = {}
+        for persistent in (False, True):
+            def build():
+                svc = SearchService(cfg, env, BanditValueBackend(), G=G,
+                                    p=p, executor=executor,
+                                    compact_threshold=0.5,
+                                    persistent_compaction=persistent)
+                for i in range(n):
+                    svc.submit(SearchRequest(uid=i, seed=i, budget=budget))
+                return svc
+            build().run()                # warmup (jit compile)
+            svc = build()
+            t0 = time.perf_counter()
+            svc.run()
+            wall = time.perf_counter() - t0
+            per_mode[persistent] = (
+                wall / max(svc.stats.supersteps, 1) * 1e6, svc.stats)
+        per_us, _ = per_mode[False]
+        ses_us, s = per_mode[True]
+        csv_line(
+            f"service_persist_compact_{executor}_G{G}", ses_us,
+            f"per_superstep_us={per_us:.1f} persistent_us={ses_us:.1f} "
+            f"speedup={per_us / max(ses_us, 1e-9):.2f}x "
+            f"gathers={s.session_gathers} reuses={s.session_reuses} "
+            f"scatters={s.session_scatters} "
+            f"compacted={s.compacted_supersteps}/{s.supersteps}")
+
+
+def _hetero_rows(executors, G, p, budget, X):
+    """Heterogeneous-config mix through the frontend: two shape classes,
+    two arena pools, supersteps round-robinned across them."""
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    cfgs = (TreeConfig(X=X, F=6, D=8),
+            TreeConfig(X=max(64, X // 2), F=6, D=6))
+    n = 2 * G
+    for executor in executors:
+        def build():
+            fe = ServiceFrontend(env, BanditValueBackend(), G=G, p=p,
+                                 executor=executor, compact_threshold=0.5)
+            for i in range(n):
+                fe.submit(SearchRequest(uid=i, seed=i, budget=budget,
+                                        cfg=cfgs[i % len(cfgs)]))
+            return fe
+        build().run()                    # warmup (jit compile)
+        fe = build()
+        t0 = time.perf_counter()
+        done = fe.run()
+        wall = time.perf_counter() - t0
+        fe.close()
+        assert len(done) == n and len(fe.pools) == len(cfgs)
+        s = fe.stats
+        csv_line(
+            f"service_hetero_mix_{executor}_G{G}",
+            wall / max(s.supersteps, 1) * 1e6,
+            f"searches_per_sec={len(done) / wall:.2f} pools={len(fe.pools)} "
+            f"supersteps={s.supersteps}")
+
+
 def run(smoke: bool = False):
     executors = ("reference", "faithful", "pallas")
     gs = (2,) if smoke else (1, 2, 4, 8)
@@ -76,6 +151,15 @@ def run(smoke: bool = False):
         for tag, thresh in (("low_masked", 0.0), ("low_compacted", 0.5)):
             _one(executor, G, p=p, budget=budget, X=X,
                  n_req=max(1, G // 4), compact_threshold=thresh, tag=tag)
+
+    # compaction sessions: per-superstep gather/scatter vs one resident
+    # sub-arena (scatter deferred to close) on a stable low-occupancy set
+    _persist_compact_rows(("faithful",) if smoke else executors,
+                          G, p, budget, X)
+
+    # heterogeneous-config mix through the multi-arena frontend
+    _hetero_rows(("faithful",) if smoke else executors,
+                 2 if smoke else 4, p, budget, X)
 
     # host-expansion engine at high G: per-slot env.step loop vs ONE
     # flattened step_batch over all slots (core.expand) — the ROADMAP

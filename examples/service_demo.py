@@ -18,9 +18,20 @@ the same batch from a process pool of scalar-env workers (for envs with
 no vectorized form), and --expansion loop is the original reference
 path.  All three are bit-identical (tests/test_executor_matrix.py).
 
+Compaction is session-based: once occupancy drops below the threshold
+the active slots are gathered ONCE into a device-resident sub-arena that
+persists across supersteps (watch for "resident" in the trace) and is
+scattered back only at membership changes or snapshot reads.
+
+--frontend switches to the multi-arena ServiceFrontend: the same queue
+but with requests carrying THREE different TreeConfig shape classes,
+bucketed into per-config arena pools and round-robinned — the
+heterogeneous-config serving mode a single SearchService cannot offer.
+
   PYTHONPATH=src python examples/service_demo.py
   PYTHONPATH=src python examples/service_demo.py --executor pallas
   PYTHONPATH=src python examples/service_demo.py --expansion loop
+  PYTHONPATH=src python examples/service_demo.py --frontend
 """
 
 import argparse
@@ -29,7 +40,47 @@ import numpy as np
 
 from repro.core import TreeConfig
 from repro.envs import BanditTreeEnv, BanditValueBackend
-from repro.service import SearchRequest, SearchService
+from repro.service import SearchRequest, SearchService, ServiceFrontend
+
+
+def run_frontend(args):
+    """Heterogeneous-config serving: one frontend, three config buckets."""
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    cfgs = (TreeConfig(X=512, F=6, D=8),    # deep, big arena
+            TreeConfig(X=256, F=6, D=6),    # mid
+            TreeConfig(X=128, F=6, D=4))    # shallow, latency-lean
+    fe = ServiceFrontend(
+        env, BanditValueBackend(), G=4, p=16,
+        executor=args.executor, expansion=args.expansion,
+        compact_threshold=0.5, compact_exit_threshold=0.75,
+    )
+    for i in range(12):
+        fe.submit(SearchRequest(
+            uid=i, seed=i, budget=6 + 2 * (i % 4), moves=1 if i % 3 else 2,
+            cfg=cfgs[i % len(cfgs)],        # mixed shape classes
+        ))
+    while fe.superstep():
+        pool = fe.pools[fe.last_key]
+        d = pool.last_decision
+        mode = (f"session[{d['session']}] sub-arena G={d['G_exec']}"
+                if d["compacted"] else "masked full arena")
+        print(f"superstep {fe.stats.supersteps:3d}: "
+              f"bucket X={pool.cfg.X} D={pool.cfg.D} "
+              f"{d['A']}/{d['G']} slots active — {mode}")
+    for r in sorted(fe.completed, key=lambda r: r.uid):
+        print(f"req {r.uid:2d}: actions={r.actions} "
+              f"reward={sum(r.rewards):+.3f} supersteps={r.supersteps}")
+    print()
+    for ps in fe.pool_summaries():
+        print(f"bucket {ps['bucket'][:3]}: {ps['completed']} done in "
+              f"{ps['supersteps']} supersteps; sessions: "
+              f"{ps['session_gathers']} gathers / "
+              f"{ps['session_reuses']} resident reuses / "
+              f"{ps['session_scatters']} scatters")
+    s = fe.stats
+    print(f"\n{s.completed} searches over {len(fe.pools)} config buckets "
+          f"in {s.supersteps} supersteps on executor={args.executor}")
+    fe.close()
 
 
 def main():
@@ -43,7 +94,13 @@ def main():
                     help="host-expansion engine: per-worker env.step loop, "
                          "one flattened step_batch across all slots "
                          "(vector), or a process pool of scalar workers")
+    ap.add_argument("--frontend", action="store_true",
+                    help="serve a heterogeneous-config mix through the "
+                         "multi-arena ServiceFrontend instead of one "
+                         "single-config SearchService")
     args = ap.parse_args()
+    if args.frontend:
+        return run_frontend(args)
 
     env = BanditTreeEnv(fanout=6, terminal_depth=12)
     cfg = TreeConfig(X=512, F=6, D=8)
@@ -67,8 +124,8 @@ def main():
     # drive superstep-by-superstep to trace the occupancy/compaction choice
     while svc.superstep():
         d = svc.last_decision
-        mode = (f"compacted -> sub-arena G={d['G_exec']}" if d["compacted"]
-                else "masked full arena")
+        mode = (f"session[{d['session']}] sub-arena G={d['G_exec']}"
+                if d["compacted"] else "masked full arena")
         print(f"superstep {svc.stats.supersteps:3d}: "
               f"{d['A']}/{d['G']} slots active "
               f"(occupancy {d['occupancy']:.2f}) — {mode}")

@@ -33,6 +33,18 @@ stays bounded) and `scatter_sub` writes the results back — the service
 scheduler uses this at low occupancy so idle slots stop costing masked
 device work (ROADMAP item).  Per-slot arithmetic is position-independent,
 so compaction never changes what a slot computes.
+
+Persistent compaction sessions: the paper's accelerator wins by keeping
+the tree device-resident across supersteps (§IV), and BENCH_service.json
+showed that re-gathering the sub-arena every superstep costs more than
+the masked work it saves.  `open_session` wraps gather/scatter in a
+CompactionSession that keeps the dense sub-arena resident: the gather
+happens once, supersteps accumulate in the sub-executor with
+dirty-tracking, and the scatter back into the full arena is deferred to
+session close or an explicit `sync` (snapshot reads).  Membership
+changes (admission / eviction / reroot rewrites) invalidate the session
+— the pool closes and reopens it — so a stable active set pays one
+gather + one scatter total instead of one per superstep.
 """
 
 from __future__ import annotations
@@ -81,6 +93,7 @@ class InTreeExecutor(Protocol):
     def block(self) -> None: ...
     def gather_sub(self, slot_idx: np.ndarray, Gc: int) -> "InTreeExecutor": ...
     def scatter_sub(self, sub: "InTreeExecutor", slot_idx: np.ndarray) -> None: ...
+    def open_session(self, slot_idx: np.ndarray, Gc: int) -> "CompactionSession": ...
     # single-tree compat surface (the G=1 client's `tree` property and
     # snapshot/action helpers used throughout tests and examples)
     def init(self, root_num_actions: int): ...
@@ -88,6 +101,73 @@ class InTreeExecutor(Protocol):
     def set_tree(self, tree, g: int = 0) -> None: ...
     def snapshot(self, tree) -> dict: ...
     def best_action(self, tree) -> int: ...
+
+
+class CompactionSession:
+    """Device-resident dense sub-arena spanning one fixed active set.
+
+    Built on any InTreeExecutor's gather_sub/scatter_sub, so every backend
+    (reference / faithful / relaxed / wavefront / pallas) gets persistent
+    compaction through the same object.  Lifecycle:
+
+      open   — ONE gather_sub copies the active slots into `sub` (dense,
+               pow2-padded); the session then stays resident.
+      dirty  — `mark_superstep` records that `sub` holds updates the full
+               arena has not seen; `sync` scatters them back WITHOUT
+               closing (snapshot reads force this), after which `sub`
+               keeps accumulating.
+      close  — final sync + the session refuses further use.  The owning
+               pool closes on any membership change (admit / evict) or
+               content rewrite of a member slot (reroot / reset), since a
+               host-side write to the full arena would make `sub` stale.
+
+    `matches` is the reuse test: same slot set, same padded width, still
+    open.  A stable active set therefore pays one gather and one scatter
+    total, however many supersteps it stays stable — the serving analogue
+    of the paper keeping the tree SRAM-resident across supersteps.
+    """
+
+    def __init__(self, parent: "InTreeExecutor", slot_idx: np.ndarray,
+                 Gc: int):
+        self.parent = parent
+        self.slot_idx = np.asarray(slot_idx, np.int32).copy()
+        self.Gc = int(Gc)
+        self.sub = parent.gather_sub(self.slot_idx, self.Gc)
+        self.dirty = False
+        self.open = True
+        self.supersteps = 0
+
+    @property
+    def A(self) -> int:
+        return len(self.slot_idx)
+
+    def matches(self, slot_idx: np.ndarray, Gc: int) -> bool:
+        return (self.open and self.Gc == int(Gc)
+                and len(slot_idx) == self.A
+                and bool(np.array_equal(self.slot_idx, slot_idx)))
+
+    def owns(self, g: int) -> bool:
+        return self.open and bool(np.any(self.slot_idx == g))
+
+    def mark_superstep(self):
+        assert self.open, "superstep on a closed CompactionSession"
+        self.dirty = True
+        self.supersteps += 1
+
+    def sync(self) -> bool:
+        """Scatter pending sub-arena updates back; True if one happened."""
+        if self.dirty:
+            self.parent.scatter_sub(self.sub, self.slot_idx)
+            self.dirty = False
+            return True
+        return False
+
+    def close(self) -> bool:
+        """Final sync; the session is unusable afterwards.  True if the
+        close actually scattered."""
+        scattered = self.sync() if self.open else False
+        self.open = False
+        return scattered
 
 
 def _sel_to_host(sel) -> dict:
@@ -186,6 +266,9 @@ class JaxExecutor:
         a = len(slot_idx)
         self.trees = jax.tree.map(
             lambda full, s: full.at[idx].set(s[:a]), self.trees, sub.trees)
+
+    def open_session(self, slot_idx: np.ndarray, Gc: int) -> CompactionSession:
+        return CompactionSession(self, slot_idx, Gc)
 
     # -- single-tree compat surface (G=1 driver / tests) ---------------
     def init(self, root_num_actions: int) -> UCTree:
@@ -337,6 +420,9 @@ class ReferenceExecutor:
     def scatter_sub(self, sub: "ReferenceExecutor", slot_idx: np.ndarray):
         for i, g in enumerate(np.asarray(slot_idx)):
             self.trees[g] = sub.trees[i]
+
+    def open_session(self, slot_idx: np.ndarray, Gc: int) -> CompactionSession:
+        return CompactionSession(self, slot_idx, Gc)
 
     # -- single-tree compat surface ------------------------------------
     def init(self, root_num_actions: int):

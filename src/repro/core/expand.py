@@ -15,7 +15,10 @@ module is the engine that removes it:
   mode="pool"    — same flattening, but the batch is served by a process
                    pool of scalar-env workers (envs.vector.PoolVectorEnv)
                    — the paper's multi-worker CPU side, for envs without a
-                   vectorized form.
+                   vectorized form.  Step and successor action counts are
+                   fused into ONE pooled round-trip per superstep
+                   (step_and_count_batch) so states are pickled once, not
+                   twice.
   mode="auto"    — "vector" when the env supports it, else "loop".
 
 All modes are bit-identical: the flattening preserves the loop's
@@ -24,7 +27,8 @@ property-tested against scalar ``step`` (tests/test_vector_env.py); the
 full cross-executor guarantee is pinned by tests/test_executor_matrix.py.
 
 Both drivers consume this engine: TreeParallelMCTS feeds it one slot,
-service.scheduler.SearchService feeds it every active slot of a superstep.
+service.pool.ArenaPool feeds it every active slot of a superstep (and a
+multi-bucket ServiceFrontend shares ONE engine across all its pools).
 """
 
 from __future__ import annotations
@@ -37,7 +41,7 @@ import numpy as np
 from repro.core import fixedpoint as fx
 from repro.core.state_table import StateTable
 from repro.core.tree import NULL
-from repro.envs.vector import PoolVectorEnv, has_vector_env
+from repro.envs.vector import PoolVectorEnv, has_fused_step, has_vector_env
 
 EXPANSION_MODES = ("loop", "vector", "pool", "auto")
 
@@ -191,10 +195,17 @@ class ExpansionEngine:
         if not seg:  # saturated/terminal superstep: nothing to expand
             return out
 
-        nxt, _, term = self._venv.step_batch(
-            np.stack(flat_states), np.asarray(flat_actions, np.int64))
+        if has_fused_step(self._venv):
+            # one round-trip: step + successor action counts together
+            # (halves the per-superstep pickling of the pool fallback)
+            nxt, _, term, na_raw = self._venv.step_and_count_batch(
+                np.stack(flat_states), np.asarray(flat_actions, np.int64))
+        else:
+            nxt, _, term = self._venv.step_batch(
+                np.stack(flat_states), np.asarray(flat_actions, np.int64))
+            na_raw = self._venv.num_actions_batch(nxt)
         term = np.asarray(term, bool)
-        na = np.where(term, 0, np.asarray(self._venv.num_actions_batch(nxt)))
+        na = np.where(term, 0, np.asarray(na_raw))
 
         # scatter per (slot, worker) segment; ONE duplicate-checked ST
         # write per slot (every id freshly allocated -> distinct)

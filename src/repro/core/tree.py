@@ -109,6 +109,32 @@ class TreeConfig:
         }
 
 
+def bucket_key(cfg: TreeConfig) -> tuple:
+    """Canonical arena-pool bucket of a config (service frontend routing).
+
+    Two configs share a pool iff every field that can change a slot's bit
+    evolution matches.  The only padding that is semantics-free is the
+    fanout: ``F`` enters the device programs solely through the ``Fp``
+    edge-array layout (scoring masks by per-node ``num_actions`` from the
+    env, and insert's provisional ``num_actions = F`` is overwritten by
+    finalize before any read), so F=3 and F=4 requests share an Fp=4
+    arena.  ``X`` and ``D`` look like shape parameters but are semantic —
+    X caps the per-superstep insertion budget and the move-saturation
+    check, D caps selection depth — so padding either would break the
+    frontend's bit-identity contract with a dedicated single-config
+    service.
+    """
+    return (cfg.X, cfg.Fp, cfg.D, cfg.beta, cfg.vl_mode, cfg.vl_const,
+            cfg.score_fn, cfg.leaf_mode, cfg.expand_all)
+
+
+def canonical_config(cfg: TreeConfig) -> TreeConfig:
+    """The pool-side representative of ``cfg``'s bucket: fanout padded to
+    the Fp lane width, everything semantic untouched.  ``bucket_key`` of
+    the result equals ``bucket_key(cfg)``."""
+    return dataclasses.replace(cfg, F=cfg.Fp)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class UCTree:

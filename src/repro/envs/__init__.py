@@ -1,8 +1,10 @@
 from repro.envs.bandit_tree import BanditTreeEnv, BanditValueBackend
 from repro.envs.ponglite import PongLiteEnv
 from repro.envs.gomoku import GomokuEnv, GomokuRolloutBackend
-from repro.envs.vector import PoolVectorEnv, VectorEnv, has_vector_env
+from repro.envs.vector import (
+    PoolVectorEnv, VectorEnv, has_fused_step, has_vector_env,
+)
 
 __all__ = ["BanditTreeEnv", "BanditValueBackend", "PongLiteEnv", "GomokuEnv",
            "GomokuRolloutBackend", "PoolVectorEnv", "VectorEnv",
-           "has_vector_env"]
+           "has_fused_step", "has_vector_env"]

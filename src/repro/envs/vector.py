@@ -19,6 +19,16 @@ no vectorized form:
                    the paper, for envs where a numpy rewrite is not worth
                    it.  Deterministic: chunk boundaries depend only on
                    (B, workers) and results are concatenated in order.
+
+Fused stepping: the expansion engine always needs the legal-action count
+of every stepped state, and running that as step_batch THEN
+num_actions_batch costs a pooled env two IPC round-trips per superstep —
+the next states are pickled back to the workers that just produced them.
+``step_and_count_batch`` is the optional protocol extension that fuses
+both into one round-trip (each worker counts the action of the state it
+just stepped, in-process); the engine uses it when present
+(``has_fused_step``), and PoolVectorEnv implements it.  Bit-identical to
+the two-call form for any deterministic env.
 """
 
 from __future__ import annotations
@@ -54,6 +64,13 @@ def has_vector_env(env) -> bool:
         getattr(env, "num_actions_batch", None))
 
 
+def has_fused_step(venv) -> bool:
+    """True when `venv` implements the optional fused
+    ``step_and_count_batch`` extension (one round-trip for step +
+    legal-action count — PoolVectorEnv's IPC halving)."""
+    return callable(getattr(venv, "step_and_count_batch", None))
+
+
 # --------------------------------------------------------------------------
 # Process-pool fallback (paper's multi-worker CPU side)
 # --------------------------------------------------------------------------
@@ -82,6 +99,22 @@ def _pool_na_chunk(states):
     return np.asarray([_WORKER_ENV.num_actions(s) for s in states], np.int64)
 
 
+def _pool_step_na_chunk(payload):
+    """Fused chunk: step AND count the successor's legal actions in the
+    worker, so the successor states never round-trip through pickling
+    just to be counted."""
+    states, actions = payload
+    nxt, rew, term, na = [], [], [], []
+    for s, a in zip(states, actions):
+        s2, r, t = _WORKER_ENV.step(s, int(a))
+        nxt.append(s2)
+        rew.append(r)
+        term.append(t)
+        na.append(_WORKER_ENV.num_actions(s2))
+    return (np.stack(nxt), np.asarray(rew, np.float64),
+            np.asarray(term, bool), np.asarray(na, np.int64))
+
+
 class PoolVectorEnv:
     """Scalar env behind the VectorEnv protocol via a process pool.
 
@@ -98,6 +131,9 @@ class PoolVectorEnv:
         self.env = env
         self.workers = max(1, int(workers))
         self._pool = None
+        # batched round-trips served (fused counts once — the engine's
+        # per-superstep IPC halving is observable here)
+        self.batch_calls = 0
 
     def _ensure_pool(self):
         if self._pool is None:
@@ -120,6 +156,7 @@ class PoolVectorEnv:
         states = np.asarray(states)
         actions = np.asarray(actions)
         spans = self._chunks(len(states))
+        self.batch_calls += 1
         if len(spans) <= 1:  # tiny batch: skip the IPC round-trip
             _pool_init(self.env)
             out = [_pool_step_chunk((states, actions))]
@@ -134,12 +171,32 @@ class PoolVectorEnv:
     def num_actions_batch(self, states):
         states = np.asarray(states)
         spans = self._chunks(len(states))
+        self.batch_calls += 1
         if len(spans) <= 1:
             _pool_init(self.env)
             return _pool_na_chunk(states)
         out = list(self._ensure_pool().map(
             _pool_na_chunk, [states[a:b] for a, b in spans]))
         return np.concatenate(out)
+
+    def step_and_count_batch(self, states, actions):
+        """Fused step + legal-action count: ONE pooled round-trip instead
+        of step_batch followed by num_actions_batch (which pickles the
+        freshly produced successor states back to the workers).  Returns
+        (next_states, rewards, terminal, num_actions) — bit-identical to
+        the two-call form."""
+        states = np.asarray(states)
+        actions = np.asarray(actions)
+        spans = self._chunks(len(states))
+        self.batch_calls += 1
+        if len(spans) <= 1:
+            _pool_init(self.env)
+            out = [_pool_step_na_chunk((states, actions))]
+        else:
+            out = list(self._ensure_pool().map(
+                _pool_step_na_chunk,
+                [(states[a:b], actions[a:b]) for a, b in spans]))
+        return tuple(np.concatenate([o[i] for o in out]) for i in range(4))
 
     def close(self):
         if self._pool is not None:

@@ -1,19 +1,25 @@
-"""Multi-tree search service: vmapped tree arena + request scheduler.
+"""Multi-tree search service: config-bucketed arena pools + scheduler.
 
-See arena.py (G stacked UCTrees, one device program per phase) and
-scheduler.py (slot admission / fused simulation batching / eviction).
+Three layers (see scheduler.py for the map): frontend.py routes
+heterogeneous-config requests into per-bucket pools, pool.py owns one
+bucket's arena and BSP superstep loop (with persistent compaction
+sessions), and scheduler.py keeps SearchService — the single-bucket
+compatibility surface — under its historical name.
 """
 
 from repro.service.arena import (
     JaxArenaExecutor, PallasArenaExecutor, ReferenceArenaExecutor,
     make_arena_executor,
 )
-from repro.service.scheduler import (
-    SearchRequest, SearchResult, SearchService, ServiceStats,
+from repro.service.frontend import ServiceFrontend
+from repro.service.pool import (
+    ArenaPool, SearchRequest, SearchResult, ServiceStats,
 )
+from repro.service.scheduler import SearchService
 
 __all__ = [
     "JaxArenaExecutor", "PallasArenaExecutor", "ReferenceArenaExecutor",
     "make_arena_executor",
-    "SearchRequest", "SearchResult", "SearchService", "ServiceStats",
+    "ArenaPool", "SearchRequest", "SearchResult", "SearchService",
+    "ServiceFrontend", "ServiceStats",
 ]

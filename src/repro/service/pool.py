@@ -1,0 +1,448 @@
+"""ArenaPool — one config bucket's arena, state tables and superstep loop.
+
+Middle layer of the service stack (frontend.py routes requests here,
+scheduler.py's SearchService is the single-bucket compatibility wrapper):
+an ArenaPool owns ONE TreeConfig shape class — a G-slot tree arena on one
+InTreeExecutor, the per-slot StateTables, a host-expansion engine and the
+admission queue — and advances every occupied slot through one BSP
+superstep per tick (Selection / Insertion / host expansion / fused
+Simulation / BackUp, one device program per phase).
+
+Lifecycle of a request:
+  queued -> admitted into a free slot (fresh tree + ST, root = seed state)
+         -> superstepped until its per-move budget / node cap / saturation
+         -> move committed (robust child), then either
+              * evicted with its action trace + root visit distributions, or
+              * advanced in place: core.reroot extracts the chosen child's
+                subtree (statistics preserved) and the search continues on
+                the same slot for its next move.
+
+Requests may carry their own TreeConfig: any config in the pool's bucket
+(core.tree.bucket_key — same X/D/semantics, fanout padded to the shared
+Fp lane width) is accepted, and host-side readouts (visit distributions)
+use the request's own F.
+
+Active-slot compaction: idle slots execute masked device work under the
+uniform arena program — fine at high occupancy, wasteful at low.  Below
+the enter threshold the pool opens a persistent CompactionSession
+(core.executor): ONE gather copies the A active slots into a dense
+pow2-padded sub-arena that stays device-resident across supersteps, with
+the scatter back deferred to session close or snapshot reads
+(dirty-tracking).  The session is invalidated only on membership changes
+— admission, eviction, or a reroot rewriting a member slot — so a stable
+active set pays one gather + one scatter total instead of one per
+superstep (the per-superstep re-gather was a measured net loss in
+BENCH_service.json; `persistent_compaction=False` restores it for
+comparison).  A separate exit threshold (hysteresis) keeps occupancy
+oscillating around the enter threshold from thrashing gather/scatter.
+Per-slot arithmetic is position-independent, so masked, per-superstep
+compacted and session execution are all bit-identical.
+
+Determinism: with a deterministic SimulationBackend the per-slot tree
+evolution is bit-identical to a single-tree TreeParallelMCTS run of the
+same request (tests/test_service.py) — scheduling changes WHEN a tree's
+supersteps happen, never what they compute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import fixedpoint as fx
+from repro.core import reroot
+from repro.core.executor import CompactionSession
+from repro.core.expand import ExpansionEngine
+from repro.core.mcts import Environment, SimulationBackend
+from repro.core.state_table import StateTable
+from repro.core.tree import NULL, TreeConfig, bucket_key
+from repro.service.arena import make_arena_executor
+
+
+@dataclasses.dataclass
+class SearchRequest:
+    """One user search: plan `moves` actions from the seed state, spending
+    up to `budget` supersteps of p simulations per move.  `cfg` is the
+    request's own tree shape — the frontend routes on it; None means "the
+    serving pool's config"."""
+
+    uid: int
+    seed: int
+    budget: int = 16
+    moves: int = 1
+    keep_tree: bool = False      # attach the final tree snapshot to the result
+    cfg: Optional[TreeConfig] = None
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass
+class SearchResult:
+    uid: int
+    actions: list = dataclasses.field(default_factory=list)
+    rewards: list = dataclasses.field(default_factory=list)
+    visit_counts: list = dataclasses.field(default_factory=list)  # per move, [F]
+    supersteps: int = 0
+    terminal: bool = False
+    tree_snapshot: Optional[dict] = None
+    submitted_at: float = 0.0
+    done_at: float = 0.0
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: SearchRequest
+    res: SearchResult
+    root_state: np.ndarray
+    cfg: TreeConfig              # the request's own config (host readouts)
+    moves_done: int = 0
+    move_supersteps: int = 0
+    prev_size: int = 1
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    supersteps: int = 0
+    admitted: int = 0
+    completed: int = 0
+    sim_rows: int = 0            # fused simulation-batch rows evaluated
+    sim_batches: int = 0         # evaluate() calls (one per superstep)
+    max_fused_rows: int = 0
+    compacted_supersteps: int = 0  # supersteps run on a gathered sub-arena
+    session_gathers: int = 0     # CompactionSession opens (arena -> sub copy)
+    session_scatters: int = 0    # sub -> arena write-backs (close/sync)
+    session_reuses: int = 0      # supersteps served by an already-resident sub
+    occupancy_sum: float = 0.0     # sum of per-superstep A/G (avg = /supersteps)
+    t_intree: float = 0.0        # select + insert + finalize + backup
+    t_host: float = 0.0          # ST / env expansion + scheduling bookkeeping
+    t_expand: float = 0.0        # expansion-engine share of t_host
+    t_sim: float = 0.0
+
+    def merge(self, other: "ServiceStats") -> "ServiceStats":
+        """Aggregate across pools (frontend summary); max_fused_rows is a
+        max, everything else sums."""
+        out = ServiceStats()
+        for f in dataclasses.fields(ServiceStats):
+            a, b = getattr(self, f.name), getattr(other, f.name)
+            setattr(out, f.name,
+                    max(a, b) if f.name == "max_fused_rows" else a + b)
+        return out
+
+
+class ArenaPool:
+    """G-slot multi-tree MCTS pool for one config bucket (one host, one
+    device program per phase)."""
+
+    def __init__(
+        self,
+        cfg: TreeConfig,
+        env: Environment,
+        sim: SimulationBackend,
+        G: int,
+        p: int,
+        executor: str = "faithful",
+        alternating_signs: bool = False,
+        reuse_subtree: bool = True,
+        compact_threshold: float = 0.0,
+        compact_exit_threshold: Optional[float] = None,
+        persistent_compaction: bool = True,
+        expansion: str = "loop",
+        expander: Optional[ExpansionEngine] = None,
+    ):
+        self.cfg, self.env, self.sim = cfg, env, sim
+        self.G, self.p = G, p
+        self.alternating_signs = alternating_signs
+        self.reuse_subtree = reuse_subtree
+        # host-expansion engine: "loop" per-worker env.step, "vector" ONE
+        # flattened step_batch over all slots' pending expansions, "pool"
+        # the process-pool scalar fallback (core.expand) — bit-identical.
+        # A frontend serving several pools passes one shared engine in.
+        self._owns_expander = expander is None
+        self.expander = ExpansionEngine(env, expansion) if expander is None \
+            else expander
+        # occupancy A/G at or below this gathers active slots into a dense
+        # sub-arena for the device phases.  Opt-in (0.0 = always masked).
+        # Hysteresis: once compacted, the pool stays compacted until
+        # occupancy rises above `compact_exit_threshold` (>= enter; default
+        # equal, i.e. no hysteresis) so oscillation around the enter
+        # threshold cannot thrash gather/scatter.
+        self.compact_threshold = compact_threshold
+        self.compact_exit_threshold = (
+            compact_threshold if compact_exit_threshold is None
+            else compact_exit_threshold)
+        assert self.compact_exit_threshold >= self.compact_threshold, (
+            "hysteresis exit threshold must be >= enter threshold")
+        # keep the dense sub-arena device-resident across supersteps
+        # (scatter only on membership change / snapshot read); False
+        # restores the per-superstep gather/scatter for comparison
+        self.persistent_compaction = persistent_compaction
+        self.exec = make_arena_executor(cfg, G, executor)
+        self.sts = [StateTable(cfg.X, env.state_shape, env.state_dtype)
+                    for _ in range(G)]
+        self.slots: list[Optional[_Slot]] = [None] * G
+        self.queue: list[SearchRequest] = []
+        self.completed: list[SearchResult] = []
+        self.stats = ServiceStats()
+        self.last_decision: dict = {}   # per-superstep occupancy/compaction
+        self._session: Optional[CompactionSession] = None
+        self._compacting = False        # hysteresis state
+        # fixed per-slot finalize width (vmapped finalize needs one shape)
+        self.K = p * cfg.Fp if cfg.expand_all else p
+
+    # ---- admission ----
+    def submit(self, req: SearchRequest):
+        if req.cfg is not None and bucket_key(req.cfg) != bucket_key(self.cfg):
+            raise ValueError(
+                f"request uid={req.uid} config {req.cfg} is outside this "
+                f"pool's bucket {bucket_key(self.cfg)} — route it through "
+                f"service.frontend.ServiceFrontend")
+        if not req.submitted_at:
+            req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self):
+        for g in range(self.G):
+            if self.slots[g] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            res = SearchResult(uid=req.uid, submitted_at=req.submitted_at)
+            s0 = self.env.initial_state(req.seed)
+            na = self.env.num_actions(s0)
+            if na == 0:  # degenerate: nothing to search
+                res.terminal = True
+                self._finish(res)
+                continue
+            self.exec.reset_slot(g, na)
+            self.sts[g].flush(s0)
+            self.slots[g] = _Slot(req=req, res=res, root_state=s0,
+                                  cfg=req.cfg if req.cfg is not None
+                                  else self.cfg)
+            self.stats.admitted += 1
+
+    def _active(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots], bool)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self._active().any())
+
+    # ---- session plumbing ----
+    def _close_session(self):
+        ses, self._session = self._session, None
+        if ses is not None and ses.close():
+            self.stats.session_scatters += 1
+
+    def _sizes(self) -> np.ndarray:
+        ses = self._session
+        sizes = np.asarray(self.exec.sizes()).copy()
+        if ses is not None and ses.open and ses.dirty:
+            sizes[ses.slot_idx] = np.asarray(ses.sub.sizes())[: ses.A]
+        return sizes
+
+    def _best_actions(self) -> np.ndarray:
+        ses = self._session
+        best = np.asarray(self.exec.best_actions()).copy()
+        if ses is not None and ses.open and ses.dirty:
+            best[ses.slot_idx] = np.asarray(ses.sub.best_actions())[: ses.A]
+        return best
+
+    def _slot_snapshot(self, g: int) -> dict:
+        """Snapshot through the session: a dirty sub-arena is scattered
+        back first (the snapshot must see the latest supersteps), then the
+        full arena is read as usual."""
+        ses = self._session
+        if ses is not None and ses.owns(int(g)) and ses.sync():
+            self.stats.session_scatters += 1
+        return self.exec.slot_snapshot(g)
+
+    def _invalidate_session(self, g: int):
+        """A host-side write (reroot / reset / eviction) is about to touch
+        slot g on the full arena — a resident sub-arena copy of it would go
+        stale, so the session ends here."""
+        ses = self._session
+        if ses is not None and ses.owns(int(g)):
+            self._close_session()
+
+    # ---- occupancy decision: masked full arena vs resident sub-arena ----
+    def _pick_execution(self, active: np.ndarray):
+        """Return (executor, exec_active, rows, act_idx): `rows[i]` is the
+        arena row carrying active slot `act_idx[i]` on the chosen executor
+        (identity when masked, dense prefix when compacted)."""
+        act_idx = np.flatnonzero(active)
+        A = len(act_idx)
+        Gc = 1 << (A - 1).bit_length()     # pow2 pad: bounded program cache
+        thresh = (self.compact_exit_threshold if self._compacting
+                  else self.compact_threshold)
+        compacted = (self.compact_threshold > 0.0
+                     and A <= thresh * self.G
+                     and Gc < self.G)
+        self._compacting = compacted
+        session_state = None
+        if compacted:
+            ses = self._session
+            if ses is not None and ses.matches(act_idx, Gc):
+                session_state = "resident"
+                self.stats.session_reuses += 1
+            else:
+                self._close_session()
+                ses = self._session = self.exec.open_session(act_idx, Gc)
+                session_state = "gather"
+                self.stats.session_gathers += 1
+            ses.mark_superstep()
+        else:
+            self._close_session()
+        self.last_decision = {
+            "A": A, "G": self.G, "occupancy": A / self.G,
+            "compacted": compacted, "G_exec": Gc if compacted else self.G,
+            "session": session_state,
+        }
+        if compacted:
+            return (self._session.sub, np.arange(Gc) < A,
+                    np.arange(A), act_idx)
+        return self.exec, active, act_idx, act_idx
+
+    # ---- one fused superstep over all occupied slots ----
+    def superstep(self) -> bool:
+        self._admit()
+        active = self._active()
+        if not active.any():
+            return False
+        p, cfg = self.p, self.cfg
+        t0 = time.perf_counter()
+
+        ex, ex_active, rows, act_idx = self._pick_execution(active)
+        Ge = ex.G
+        sel_dev = ex.selection(ex_active, p)
+        sel = ex.sel_to_host(sel_dev)                         # [Ge, p, ...]
+        new_nodes = ex.insert(ex_active, sel_dev)             # [Ge, p, Fp]
+        t1 = time.perf_counter()
+
+        # host expansion: every slot's pending expansions through the
+        # engine (one flattened env batch in vector/pool mode), then ONE
+        # fused Simulation batch
+        hx = self.expander.expand(
+            [(g, self.sts[g], {k: v[r] for k, v in sel.items()},
+              new_nodes[r]) for r, g in zip(rows, act_idx)])
+        t_x = time.perf_counter()
+        self.stats.t_expand += t_x - t1
+        fused = np.concatenate([hx[g].sim_states for g in act_idx])
+        t2 = time.perf_counter()
+        values, priors = self.sim.evaluate(fused)
+        t3 = time.perf_counter()
+        self.stats.sim_rows += len(fused)
+        self.stats.sim_batches += 1
+        self.stats.max_fused_rows = max(self.stats.max_fused_rows, len(fused))
+
+        # split fused results, finalize + BackUp across all slots at once
+        values_fx = np.asarray(fx.encode(np.asarray(values)), np.int32)
+        fin_nodes = np.full((Ge, self.K), NULL, np.int32)
+        fin_na = np.zeros((Ge, self.K), np.int32)
+        fin_term = np.zeros((Ge, self.K), np.int32)
+        fin_pp = np.full((Ge, p), NULL, np.int32)
+        fin_pf = np.zeros((Ge, p, cfg.Fp), np.int32)
+        sim_nodes = np.zeros((Ge, p), np.int32)
+        vals = np.zeros((Ge, p), np.int32)
+        for i, (r, g) in enumerate(zip(rows, act_idx)):
+            row = slice(i * p, (i + 1) * p)
+            pr = priors[row] if priors is not None else None
+            (fin_nodes[r], fin_na[r], fin_term[r], fin_pp[r],
+             fin_pf[r]) = hx[g].padded_finalize_args(self.K, p, cfg.Fp, pr)
+            sim_nodes[r] = hx[g].sim_nodes
+            vals[r] = values_fx[row]
+        t4 = time.perf_counter()
+
+        ex.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
+        ex.backup(ex_active, sel_dev, sim_nodes, vals,
+                  self.alternating_signs)
+        if ex is not self.exec:
+            self.stats.compacted_supersteps += 1
+            if not self.persistent_compaction:
+                # per-superstep mode: scatter (and re-gather next tick)
+                self._close_session()
+        t5 = time.perf_counter()
+
+        self.stats.supersteps += 1
+        self.stats.occupancy_sum += len(act_idx) / self.G
+        self.stats.t_intree += (t1 - t0) + (t5 - t4)
+        self.stats.t_host += (t2 - t1) + (t4 - t3)
+        self.stats.t_sim += t3 - t2
+
+        self._commit_moves(act_idx)
+        return True
+
+    # ---- move boundary: commit / advance / evict ----
+    def _commit_moves(self, act_idx):
+        sizes = self._sizes()
+        best = None  # lazy: only computed when some slot finished its move
+        for g in act_idx:
+            slot = self.slots[g]
+            slot.move_supersteps += 1
+            slot.res.supersteps += 1
+            size = int(sizes[g])
+            done_move = (
+                slot.move_supersteps >= slot.req.budget
+                or size >= self.cfg.X
+                or size == slot.prev_size  # saturated: no node inserted
+            )
+            slot.prev_size = size
+            if not done_move:
+                continue
+            if best is None:
+                best = self._best_actions()
+            self._advance(g, int(best[g]))
+
+    def _advance(self, g: int, a: int):
+        slot, env = self.slots[g], self.env
+        snap = self._slot_snapshot(g)
+        # every path below rewrites or frees this slot on the full arena,
+        # so a resident sub-arena spanning it must end now (its final
+        # state was just scattered by the snapshot sync)
+        self._invalidate_session(g)
+        root = int(snap["root"])
+        counts = np.array(snap["edge_N"][root][: slot.cfg.F], np.int64)
+        new_state, reward, term = env.step(slot.root_state, a)
+        slot.res.actions.append(a)
+        slot.res.rewards.append(float(reward))
+        slot.res.visit_counts.append(counts)
+        slot.moves_done += 1
+        if term or slot.moves_done >= slot.req.moves:
+            slot.res.terminal = bool(term)
+            if slot.req.keep_tree:
+                slot.res.tree_snapshot = snap
+            self._finish(slot.res)
+            self.slots[g] = None
+            return
+        # long-lived request: next move on the same slot
+        slot.root_state = new_state
+        slot.move_supersteps = 0
+        new_root = int(snap["child"][root, a])
+        if self.reuse_subtree and new_root != NULL:
+            arrays, old2new = reroot.reroot(self.cfg, snap, new_root)
+            self.exec.write_slot(g, arrays)
+            self.sts[g].compact(old2new)
+            slot.prev_size = int(arrays["size"])
+        else:  # paper-faithful full flush
+            self.exec.reset_slot(g, max(env.num_actions(new_state), 1))
+            self.sts[g].flush(new_state)
+            slot.prev_size = 1
+
+    def _finish(self, res: SearchResult):
+        res.done_at = time.perf_counter()
+        self.completed.append(res)
+        self.stats.completed += 1
+
+    # ---- drive to completion ----
+    def run(self, max_supersteps: int = 100_000) -> list[SearchResult]:
+        while (self.queue or self._active().any()) \
+                and self.stats.supersteps < max_supersteps:
+            if not self.superstep():
+                break
+        return self.completed
+
+    def close(self):
+        """Flush any resident session and release expansion-engine
+        resources (process pool, if any)."""
+        self._close_session()
+        if self._owns_expander:
+            self.expander.close()

@@ -1,326 +1,47 @@
-"""Search scheduler — continuous batching of MCTS requests over tree slots.
+"""SearchService — single-bucket compatibility wrapper over ArenaPool.
 
-Mirrors serving/batcher.py's slot pattern, one level up the stack: the
+The service stack is three layers now (multi-arena frontend refactor):
+
+  frontend.py   ServiceFrontend — accepts requests carrying their own
+                TreeConfig, buckets them by shape class
+                (core.tree.bucket_key: same X/D/semantics, fanout padded
+                to a shared Fp lane width) into per-bucket arena pools,
+                and round-robins supersteps across pools.
+  pool.py       ArenaPool — one bucket's G-slot arena + StateTables +
+                expansion engine + admission queue; the BSP superstep
+                (Selection / Insertion / host expansion / fused
+                Simulation / BackUp), move commit / reroot advance /
+                eviction, and the occupancy decision with persistent
+                CompactionSessions (core.executor) and hysteresis.
+  this module   SearchService — ArenaPool under its historical name and
+                signature: the one-config service every existing test,
+                bench and example was written against.  It IS an
+                ArenaPool (subclass adding nothing), so the scheduler
+                surface — submit/superstep/run, stats, last_decision,
+                exec — is unchanged.
+
+Mirrors serving/batcher.py's slot pattern one level up the stack: the
 pool is a TreeArena of G slots instead of a KV-cache pool, a request is a
-whole search (env seed + superstep budget + number of moves) instead of a
-prompt, and the decode tick is a BSP superstep advancing EVERY occupied
-slot through Selection / Insertion / host expansion / Simulation / BackUp
-together.  The Simulation phase is fused: the p simulation states of every
-active slot are concatenated into ONE SimulationBackend.evaluate call, so
-an expensive backend (NN / LM inference) always sees the largest batch the
-current load allows — the cross-request analogue of the within-tree worker
-batching the paper's Fig. 5 measures.
-
-Lifecycle of a request:
-  queued -> admitted into a free slot (fresh tree + ST, root = seed state)
-         -> superstepped until its per-move budget / node cap / saturation
-         -> move committed (robust child), then either
-              * evicted with its action trace + root visit distributions, or
-              * advanced in place: core.reroot extracts the chosen child's
-                subtree (statistics preserved) and the search continues on
-                the same slot for its next move.
-
-Active-slot compaction: idle slots execute masked device work under the
-uniform arena program — fine at high occupancy, wasteful at low.  Below an
-occupancy threshold the scheduler gathers the A active slots into a dense
-sub-arena (padded to the next power of two so the device program cache
-stays bounded), runs every device phase on the sub-arena, and scatters the
-results back (executor.gather_sub / scatter_sub).  Per-slot arithmetic is
-position-independent, so masked and compacted execution are bit-identical.
-
-Determinism: with a deterministic SimulationBackend the per-slot tree
-evolution is bit-identical to a single-tree TreeParallelMCTS run of the
-same request (tests/test_service.py) — scheduling changes WHEN a tree's
-supersteps happen, never what they compute.
+whole search instead of a prompt, and the decode tick is a BSP superstep
+advancing EVERY occupied slot together, with all slots' simulation states
+fused into ONE SimulationBackend.evaluate batch (the cross-request
+analogue of the within-tree worker batching the paper's Fig. 5 measures).
+See pool.py for the lifecycle and compaction details.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Optional
+from repro.service.pool import (
+    ArenaPool, SearchRequest, SearchResult, ServiceStats,
+)
 
-import numpy as np
-
-from repro.core import fixedpoint as fx
-from repro.core import reroot
-from repro.core.expand import ExpansionEngine
-from repro.core.mcts import Environment, SimulationBackend
-from repro.core.state_table import StateTable
-from repro.core.tree import NULL, TreeConfig
-from repro.service.arena import make_arena_executor
+__all__ = ["ArenaPool", "SearchRequest", "SearchResult", "SearchService",
+           "ServiceStats"]
 
 
-@dataclasses.dataclass
-class SearchRequest:
-    """One user search: plan `moves` actions from the seed state, spending
-    up to `budget` supersteps of p simulations per move."""
-
-    uid: int
-    seed: int
-    budget: int = 16
-    moves: int = 1
-    keep_tree: bool = False      # attach the final tree snapshot to the result
-    submitted_at: float = 0.0
-
-
-@dataclasses.dataclass
-class SearchResult:
-    uid: int
-    actions: list = dataclasses.field(default_factory=list)
-    rewards: list = dataclasses.field(default_factory=list)
-    visit_counts: list = dataclasses.field(default_factory=list)  # per move, [F]
-    supersteps: int = 0
-    terminal: bool = False
-    tree_snapshot: Optional[dict] = None
-    submitted_at: float = 0.0
-    done_at: float = 0.0
-
-
-@dataclasses.dataclass
-class _Slot:
-    req: SearchRequest
-    res: SearchResult
-    root_state: np.ndarray
-    moves_done: int = 0
-    move_supersteps: int = 0
-    prev_size: int = 1
-
-
-@dataclasses.dataclass
-class ServiceStats:
-    supersteps: int = 0
-    admitted: int = 0
-    completed: int = 0
-    sim_rows: int = 0            # fused simulation-batch rows evaluated
-    sim_batches: int = 0         # evaluate() calls (one per superstep)
-    max_fused_rows: int = 0
-    compacted_supersteps: int = 0  # supersteps run on a gathered sub-arena
-    occupancy_sum: float = 0.0     # sum of per-superstep A/G (avg = /supersteps)
-    t_intree: float = 0.0        # select + insert + finalize + backup
-    t_host: float = 0.0          # ST / env expansion + scheduling bookkeeping
-    t_expand: float = 0.0        # expansion-engine share of t_host
-    t_sim: float = 0.0
-
-
-class SearchService:
-    """G-slot multi-tree MCTS server (one host, one device program/phase)."""
-
-    def __init__(
-        self,
-        cfg: TreeConfig,
-        env: Environment,
-        sim: SimulationBackend,
-        G: int,
-        p: int,
-        executor: str = "faithful",
-        alternating_signs: bool = False,
-        reuse_subtree: bool = True,
-        compact_threshold: float = 0.0,
-        expansion: str = "loop",
-    ):
-        self.cfg, self.env, self.sim = cfg, env, sim
-        self.G, self.p = G, p
-        self.alternating_signs = alternating_signs
-        self.reuse_subtree = reuse_subtree
-        # host-expansion engine: "loop" per-worker env.step, "vector" ONE
-        # flattened step_batch over all slots' pending expansions, "pool"
-        # the process-pool scalar fallback (core.expand) — bit-identical
-        self.expander = ExpansionEngine(env, expansion)
-        # occupancy A/G at or below this gathers active slots into a dense
-        # sub-arena for the device phases.  Opt-in (0.0 = always masked):
-        # BENCH_service.json shows the per-superstep gather/scatter costs
-        # more than the masked work it saves on this CPU container; raise
-        # it when the arena lives on a real device or X grows
-        self.compact_threshold = compact_threshold
-        self.exec = make_arena_executor(cfg, G, executor)
-        self.sts = [StateTable(cfg.X, env.state_shape, env.state_dtype)
-                    for _ in range(G)]
-        self.slots: list[Optional[_Slot]] = [None] * G
-        self.queue: list[SearchRequest] = []
-        self.completed: list[SearchResult] = []
-        self.stats = ServiceStats()
-        self.last_decision: dict = {}   # per-superstep occupancy/compaction
-        # fixed per-slot finalize width (vmapped finalize needs one shape)
-        self.K = p * cfg.Fp if cfg.expand_all else p
-
-    # ---- admission ----
-    def submit(self, req: SearchRequest):
-        req.submitted_at = time.perf_counter()
-        self.queue.append(req)
-
-    def _admit(self):
-        for g in range(self.G):
-            if self.slots[g] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            res = SearchResult(uid=req.uid, submitted_at=req.submitted_at)
-            s0 = self.env.initial_state(req.seed)
-            na = self.env.num_actions(s0)
-            if na == 0:  # degenerate: nothing to search
-                res.terminal = True
-                self._finish(res)
-                continue
-            self.exec.reset_slot(g, na)
-            self.sts[g].flush(s0)
-            self.slots[g] = _Slot(req=req, res=res, root_state=s0)
-            self.stats.admitted += 1
-
-    def _active(self) -> np.ndarray:
-        return np.array([s is not None for s in self.slots], bool)
-
-    # ---- occupancy decision: masked full arena vs gathered sub-arena ----
-    def _pick_execution(self, active: np.ndarray):
-        """Return (executor, exec_active, rows, act_idx): `rows[i]` is the
-        arena row carrying active slot `act_idx[i]` on the chosen executor
-        (identity when masked, dense prefix when compacted)."""
-        act_idx = np.flatnonzero(active)
-        A = len(act_idx)
-        Gc = 1 << (A - 1).bit_length()     # pow2 pad: bounded program cache
-        compacted = (self.compact_threshold > 0.0
-                     and A <= self.compact_threshold * self.G
-                     and Gc < self.G)
-        self.last_decision = {
-            "A": A, "G": self.G, "occupancy": A / self.G,
-            "compacted": compacted, "G_exec": Gc if compacted else self.G,
-        }
-        if compacted:
-            sub = self.exec.gather_sub(act_idx, Gc)
-            return sub, np.arange(Gc) < A, np.arange(A), act_idx
-        return self.exec, active, act_idx, act_idx
-
-    # ---- one fused superstep over all occupied slots ----
-    def superstep(self) -> bool:
-        self._admit()
-        active = self._active()
-        if not active.any():
-            return False
-        p, cfg = self.p, self.cfg
-        t0 = time.perf_counter()
-
-        ex, ex_active, rows, act_idx = self._pick_execution(active)
-        Ge = ex.G
-        sel_dev = ex.selection(ex_active, p)
-        sel = ex.sel_to_host(sel_dev)                         # [Ge, p, ...]
-        new_nodes = ex.insert(ex_active, sel_dev)             # [Ge, p, Fp]
-        t1 = time.perf_counter()
-
-        # host expansion: every slot's pending expansions through the
-        # engine (one flattened env batch in vector/pool mode), then ONE
-        # fused Simulation batch
-        hx = self.expander.expand(
-            [(g, self.sts[g], {k: v[r] for k, v in sel.items()},
-              new_nodes[r]) for r, g in zip(rows, act_idx)])
-        t_x = time.perf_counter()
-        self.stats.t_expand += t_x - t1
-        fused = np.concatenate([hx[g].sim_states for g in act_idx])
-        t2 = time.perf_counter()
-        values, priors = self.sim.evaluate(fused)
-        t3 = time.perf_counter()
-        self.stats.sim_rows += len(fused)
-        self.stats.sim_batches += 1
-        self.stats.max_fused_rows = max(self.stats.max_fused_rows, len(fused))
-
-        # split fused results, finalize + BackUp across all slots at once
-        values_fx = np.asarray(fx.encode(np.asarray(values)), np.int32)
-        fin_nodes = np.full((Ge, self.K), NULL, np.int32)
-        fin_na = np.zeros((Ge, self.K), np.int32)
-        fin_term = np.zeros((Ge, self.K), np.int32)
-        fin_pp = np.full((Ge, p), NULL, np.int32)
-        fin_pf = np.zeros((Ge, p, cfg.Fp), np.int32)
-        sim_nodes = np.zeros((Ge, p), np.int32)
-        vals = np.zeros((Ge, p), np.int32)
-        for i, (r, g) in enumerate(zip(rows, act_idx)):
-            row = slice(i * p, (i + 1) * p)
-            pr = priors[row] if priors is not None else None
-            (fin_nodes[r], fin_na[r], fin_term[r], fin_pp[r],
-             fin_pf[r]) = hx[g].padded_finalize_args(self.K, p, cfg.Fp, pr)
-            sim_nodes[r] = hx[g].sim_nodes
-            vals[r] = values_fx[row]
-        t4 = time.perf_counter()
-
-        ex.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
-        ex.backup(ex_active, sel_dev, sim_nodes, vals,
-                  self.alternating_signs)
-        if ex is not self.exec:
-            self.exec.scatter_sub(ex, act_idx)
-            self.stats.compacted_supersteps += 1
-        t5 = time.perf_counter()
-
-        self.stats.supersteps += 1
-        self.stats.occupancy_sum += len(act_idx) / self.G
-        self.stats.t_intree += (t1 - t0) + (t5 - t4)
-        self.stats.t_host += (t2 - t1) + (t4 - t3)
-        self.stats.t_sim += t3 - t2
-
-        self._commit_moves(act_idx)
-        return True
-
-    # ---- move boundary: commit / advance / evict ----
-    def _commit_moves(self, act_idx):
-        sizes = self.exec.sizes()
-        best = None  # lazy: only computed when some slot finished its move
-        for g in act_idx:
-            slot = self.slots[g]
-            slot.move_supersteps += 1
-            slot.res.supersteps += 1
-            size = int(sizes[g])
-            done_move = (
-                slot.move_supersteps >= slot.req.budget
-                or size >= self.cfg.X
-                or size == slot.prev_size  # saturated: no node inserted
-            )
-            slot.prev_size = size
-            if not done_move:
-                continue
-            if best is None:
-                best = self.exec.best_actions()
-            self._advance(g, int(best[g]))
-
-    def _advance(self, g: int, a: int):
-        slot, env = self.slots[g], self.env
-        snap = self.exec.slot_snapshot(g)
-        root = int(snap["root"])
-        counts = np.array(snap["edge_N"][root][: self.cfg.F], np.int64)
-        new_state, reward, term = env.step(slot.root_state, a)
-        slot.res.actions.append(a)
-        slot.res.rewards.append(float(reward))
-        slot.res.visit_counts.append(counts)
-        slot.moves_done += 1
-        if term or slot.moves_done >= slot.req.moves:
-            slot.res.terminal = bool(term)
-            if slot.req.keep_tree:
-                slot.res.tree_snapshot = snap
-            self._finish(slot.res)
-            self.slots[g] = None
-            return
-        # long-lived request: next move on the same slot
-        slot.root_state = new_state
-        slot.move_supersteps = 0
-        new_root = int(snap["child"][root, a])
-        if self.reuse_subtree and new_root != NULL:
-            arrays, old2new = reroot.reroot(self.cfg, snap, new_root)
-            self.exec.write_slot(g, arrays)
-            self.sts[g].compact(old2new)
-            slot.prev_size = int(arrays["size"])
-        else:  # paper-faithful full flush
-            self.exec.reset_slot(g, max(env.num_actions(new_state), 1))
-            self.sts[g].flush(new_state)
-            slot.prev_size = 1
-
-    def _finish(self, res: SearchResult):
-        res.done_at = time.perf_counter()
-        self.completed.append(res)
-        self.stats.completed += 1
-
-    # ---- drive to completion ----
-    def run(self, max_supersteps: int = 100_000) -> list[SearchResult]:
-        while (self.queue or self._active().any()) \
-                and self.stats.supersteps < max_supersteps:
-            if not self.superstep():
-                break
-        return self.completed
-
-    def close(self):
-        """Release expansion-engine resources (process pool, if any)."""
-        self.expander.close()
+class SearchService(ArenaPool):
+    """G-slot multi-tree MCTS server for ONE TreeConfig (one host, one
+    device program per phase) — the single-bucket special case of the
+    frontend/pool stack.  Heterogeneous request configs need
+    service.frontend.ServiceFrontend, which routes each request to the
+    ArenaPool serving its bucket."""

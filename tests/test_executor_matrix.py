@@ -18,6 +18,12 @@ The executor axis is EXECUTOR_NAMES from core.executor, so a newly
 registered executor is enrolled in the whole matrix automatically — a new
 name shows up here (and must declare itself in BIT_COMPATIBLE if it
 claims oracle equality).
+
+The multi-arena frontend rides the same harness: the schedule replayed
+through ServiceFrontend (config-carrying requests, persistent compaction
+sessions) must equal each executor's direct SearchService run — the
+frontend/pool split and session write-back deferral are pure
+re-layerings, never semantic changes.
 """
 
 import numpy as np
@@ -26,7 +32,7 @@ import pytest
 from repro.core import TreeConfig
 from repro.core.executor import EXECUTOR_NAMES
 from repro.envs import BanditTreeEnv, BanditValueBackend
-from repro.service import SearchRequest, SearchService
+from repro.service import SearchRequest, SearchService, ServiceFrontend
 
 CFG = TreeConfig(X=160, F=4, D=6)
 ENV = BanditTreeEnv(fanout=4, terminal_depth=10)
@@ -123,6 +129,33 @@ def test_matrix_matches_sequential_oracle(executor, compact, expansion):
         _run(executor, compact, expansion),
         _run(*ORACLE),
         f"{executor} vs oracle")
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+def test_frontend_path_matches_direct_service(executor):
+    """The frontend/pool split is a pure re-layering: the same schedule
+    routed through ServiceFrontend (requests carrying their TreeConfig,
+    persistent compaction sessions on) equals the executor's own direct
+    SearchService masked/loop run — and therefore, transitively, the
+    sequential oracle for every BIT_COMPATIBLE executor."""
+    fe = ServiceFrontend(ENV, BanditValueBackend(), G=G, p=P,
+                         executor=executor, compact_threshold=0.7,
+                         persistent_compaction=True)
+    try:
+        for kw in _SCHEDULE:
+            fe.submit(SearchRequest(cfg=CFG, **kw))
+        done = {r.uid: r for r in fe.run()}
+        stats = fe.stats
+    finally:
+        fe.close()
+    assert len(fe.pools) == 1   # one config -> one bucket
+    # the drain tail compacts, and sessions persist across supersteps
+    # instead of re-gathering each one
+    assert stats.compacted_supersteps > 0
+    assert stats.session_gathers < stats.compacted_supersteps
+    assert stats.session_reuses > 0
+    _assert_identical((done, stats.supersteps), _run(executor, 0.0, "loop"),
+                      f"frontend/{executor}")
 
 
 def test_pool_expansion_matches_oracle():
