@@ -26,6 +26,17 @@ measurable.  service_hetero_* rows drive the multi-config frontend: a
 mix of two TreeConfig shape classes routed into two arena pools by
 ServiceFrontend, round-robinned to completion.
 
+service_policy_* rows sweep the SearchClient schedule policies
+(round-robin / weighted-queue-depth / deadline-aware) over a
+heterogeneous 3-config load, recording throughput, global ticks and the
+fairness p95 admission wait from the per-pool wait histogram.
+service_xpool_fuse_* rows pin the cross-pool fused Simulation batch:
+under a gang policy ONE SimulationBackend.evaluate spans every advancing
+pool per tick, and the row records the largest fused batch vs the
+largest single-pool share inside one (fused must be strictly larger at
+heterogeneous load — the acceptance gate) plus the fused-vs-per-pool
+wall-clock.
+
 CSV: service_<executor>_G<g>_<occupancy>, us per superstep,
      searches_per_sec=<v> (+ compaction counters on low-occupancy rows)
 """
@@ -36,7 +47,10 @@ import time
 
 from repro.core import TreeConfig
 from repro.envs import BanditTreeEnv, BanditValueBackend
-from repro.service import SearchRequest, SearchService, ServiceFrontend
+from repro.service import (
+    POLICY_NAMES, SearchClient, SearchRequest, SearchService,
+    ServiceFrontend,
+)
 
 from benchmarks.common import csv_line
 
@@ -138,6 +152,73 @@ def _hetero_rows(executors, G, p, budget, X):
             f"supersteps={s.supersteps}")
 
 
+def _policy_rows(G, p, budget, X):
+    """SearchClient policy sweep over a heterogeneous 3-config load:
+    throughput + the fairness p95 admission wait per policy, and the
+    cross-pool fused-batch row for the gang policy."""
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    cfgs = (TreeConfig(X=X, F=6, D=8),
+            TreeConfig(X=max(64, X // 2), F=6, D=6),
+            TreeConfig(X=max(64, X // 4), F=6, D=5))
+    n = 3 * G
+
+    def build(policy, fuse=None):
+        cl = SearchClient(env, BanditValueBackend(), G=G, p=p,
+                          executor="faithful", policy=policy,
+                          fuse_across_pools=fuse)
+        handles = [cl.submit(SearchRequest(uid=i, seed=i, budget=budget,
+                                           cfg=cfgs[i % len(cfgs)]))
+                   for i in range(n)]
+        return cl, handles
+
+    for policy in POLICY_NAMES:
+        cl, _ = build(policy)
+        cl.drain()                       # warmup (jit compile)
+        cl.close()
+        cl, handles = build(policy)
+        t0 = time.perf_counter()
+        done = cl.drain()
+        wall = time.perf_counter() - t0
+        s = cl.stats
+        assert len(done) == n and all(h.done() for h in handles)
+        csv_line(
+            f"service_policy_{policy.replace('-', '_')}_G{G}",
+            wall / max(s.ticks, 1) * 1e6,
+            f"searches_per_sec={n / wall:.2f} ticks={s.ticks} "
+            f"supersteps={s.supersteps} "
+            f"p95_wait_supersteps={s.wait_percentile(95)} "
+            f"xpool_batches={cl.core.xpool_batches}")
+        cl.close()
+
+    # cross-pool fusion: the gang policy with ONE evaluate() across all
+    # pools per tick vs the same gang schedule evaluated per pool
+    per_mode = {}
+    for fuse in (False, True):
+        cl, _ = build("weighted-queue-depth", fuse=fuse)
+        cl.drain()                       # warmup
+        cl.close()
+        cl, _ = build("weighted-queue-depth", fuse=fuse)
+        t0 = time.perf_counter()
+        cl.drain()
+        wall = time.perf_counter() - t0
+        per_mode[fuse] = (wall, cl.core, cl.stats)
+        cl.close()
+    wall_split, _, s_split = per_mode[False]
+    wall_fused, core, s = per_mode[True]
+    assert core.xpool_rows_max > core.xpool_pool_rows_max, (
+        "fused cross-pool batches must be strictly larger than the best "
+        "single-pool batch at heterogeneous load")
+    csv_line(
+        f"service_xpool_fuse_faithful_G{G}",
+        wall_fused / max(s.ticks, 1) * 1e6,
+        f"fused_rows_max={core.xpool_rows_max} "
+        f"best_pool_rows={core.xpool_pool_rows_max} "
+        f"batch_gain={core.xpool_rows_max / max(core.xpool_pool_rows_max, 1):.2f}x "
+        f"xpool_batches={core.xpool_batches} "
+        f"per_pool_wall_s={wall_split:.3f} fused_wall_s={wall_fused:.3f} "
+        f"speedup={wall_split / max(wall_fused, 1e-9):.2f}x")
+
+
 def run(smoke: bool = False):
     executors = ("reference", "faithful", "pallas")
     gs = (2,) if smoke else (1, 2, 4, 8)
@@ -160,6 +241,9 @@ def run(smoke: bool = False):
     # heterogeneous-config mix through the multi-arena frontend
     _hetero_rows(("faithful",) if smoke else executors,
                  2 if smoke else 4, p, budget, X)
+
+    # SearchClient schedule policies + the cross-pool fused evaluate
+    _policy_rows(2 if smoke else 4, p, budget, X)
 
     # host-expansion engine at high G: per-slot env.step loop vs ONE
     # flattened step_batch over all slots (core.expand) — the ROADMAP

@@ -1,37 +1,42 @@
-"""Multi-tree search service demo: many users, one arena.
+"""Multi-tree search service demo: many users, one scheduler.
 
-Queues 12 search requests (mixed budgets, some multi-move) over a 4-slot
-tree arena: each superstep advances every occupied slot through one
-Selection / Insertion / Simulation / BackUp round in a single device
-program per phase, with all slots' simulation states fused into one
-backend batch.  Completed searches are evicted and the freed slot is
-immediately refilled from the queue; once the queue drains, occupancy
-decays and the scheduler switches from masked execution to gathering the
-active slots into a dense sub-arena (watch the per-superstep decision
+Default mode queues 12 search requests (mixed budgets, some multi-move)
+over a 4-slot tree arena: each superstep advances every occupied slot
+through one Selection / Insertion / Simulation / BackUp round in a
+single device program per phase, with all slots' simulation states fused
+into one backend batch.  Completed searches are evicted and the freed
+slot is immediately refilled from the queue; once the queue drains,
+occupancy decays and the scheduler gathers the active slots into a
+dense, device-resident sub-arena (watch the per-superstep decision
 trace).
 
-Host expansion runs through the batched engine (core.expand): with
---expansion vector (the default here) every occupied slot's pending
-expansions are flattened into ONE env.step_batch call per superstep
-instead of a per-slot, per-worker Python loop; --expansion pool serves
-the same batch from a process pool of scalar-env workers (for envs with
-no vectorized form), and --expansion loop is the original reference
-path.  All three are bit-identical (tests/test_executor_matrix.py).
+--client switches to the SearchClient handle API — the serving surface
+the paper's narrow CPU<->accelerator interface maps to.  Requests carry
+THREE different TreeConfig shape classes and are routed into per-config
+arena pools by the global scheduler under --policy:
 
-Compaction is session-based: once occupancy drops below the threshold
-the active slots are gathered ONCE into a device-resident sub-arena that
-persists across supersteps (watch for "resident" in the trace) and is
-scattered back only at membership changes or snapshot reads.
+  round-robin           one pool per tick, rotating (the compat default)
+  weighted-queue-depth  every pool with work advances each tick, deepest
+                        backlog first, admission caps proportional to
+                        queue-depth share — and the tick's Simulation
+                        rows from ALL pools fuse into ONE evaluate()
+  deadline-aware        the pool holding the nearest deadline goes first
 
---frontend switches to the multi-arena ServiceFrontend: the same queue
-but with requests carrying THREE different TreeConfig shape classes,
-bucketed into per-config arena pools and round-robinned — the
-heterogeneous-config serving mode a single SearchService cannot offer.
+The client mode streams: each handle's moves() generator yields per-move
+action/visit-distribution events as the reroots commit (iterating IS
+serving — no drain-to-completion), one request carries a deadline it
+cannot meet (watch it come back "evicted"), and one is cancelled
+mid-flight.  Cold pools retire after --retire-after idle ticks (their
+arena is freed; watch the pool summary) and resurrect on demand.
+
+--frontend keeps the pre-handle ServiceFrontend adapter path.
 
   PYTHONPATH=src python examples/service_demo.py
   PYTHONPATH=src python examples/service_demo.py --executor pallas
-  PYTHONPATH=src python examples/service_demo.py --expansion loop
   PYTHONPATH=src python examples/service_demo.py --frontend
+  PYTHONPATH=src python examples/service_demo.py --client
+  PYTHONPATH=src python examples/service_demo.py --client \
+      --policy weighted-queue-depth
 """
 
 import argparse
@@ -40,33 +45,102 @@ import numpy as np
 
 from repro.core import TreeConfig
 from repro.envs import BanditTreeEnv, BanditValueBackend
-from repro.service import SearchRequest, SearchService, ServiceFrontend
+from repro.service import (
+    POLICY_NAMES, SearchClient, SearchRequest, SearchService,
+    ServiceFrontend,
+)
+
+CFGS = (TreeConfig(X=512, F=6, D=8),    # deep, big arena
+        TreeConfig(X=256, F=6, D=6),    # mid
+        TreeConfig(X=128, F=6, D=4))    # shallow, latency-lean
+
+
+def run_client(args):
+    """SearchClient handle API: opaque handles, streamed moves, policies,
+    deadlines, cancellation and cold-pool retirement."""
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    client = SearchClient(
+        env, BanditValueBackend(), G=4, p=16,
+        executor=args.executor, expansion=args.expansion,
+        policy=args.policy, retire_after_ticks=args.retire_after,
+        compact_threshold=0.5, compact_exit_threshold=0.75,
+    )
+    handles = [client.submit(SearchRequest(
+        uid=i, seed=i, budget=6 + 2 * (i % 4), moves=1 if i % 3 else 3,
+        cfg=CFGS[i % len(CFGS)]), priority=i % 2)
+        for i in range(10)]
+    # one request that cannot make its deadline, one we cancel mid-flight
+    doomed = client.submit(
+        SearchRequest(uid=98, seed=98, budget=40, cfg=CFGS[0]),
+        deadline_supersteps=8)
+    victim = client.submit(
+        SearchRequest(uid=99, seed=99, budget=6, moves=4, cfg=CFGS[1]))
+
+    # stream one long-lived request move by move: iterating moves() polls
+    # the scheduler, so every other handle advances underneath it
+    streamer = next(h for h in handles if not h.uid % 3)
+    print(f"streaming handle uid={streamer.uid} "
+          f"({args.policy} policy, everyone else advances underneath):")
+    for ev in streamer.moves():
+        print(f"  move {ev.move_index}: action={ev.action} "
+              f"reward={ev.reward:+.3f} last={ev.last} "
+              f"visits={np.asarray(ev.visit_counts).tolist()}")
+        if ev.move_index == 1 and not victim.done():
+            victim.cancel()
+            print(f"  (cancelled uid={victim.uid} mid-flight: "
+                  f"status={victim.status()})")
+
+    client.run_until(lambda c: all(h.done() for h in handles)
+                     and doomed.done())
+    for h in sorted(handles + [doomed, victim], key=lambda h: h.uid):
+        r = h.result(wait=False)
+        print(f"req {h.uid:2d}: status={h.status():9s} "
+              f"actions={r.actions} supersteps={r.supersteps}")
+
+    # drive a few idle ticks against a late request so cold pools retire
+    late = client.submit(SearchRequest(uid=100, seed=7, budget=30,
+                                       cfg=CFGS[0]))
+    late.result()
+    print("\npools (cold ones retire after "
+          f"{args.retire_after} idle ticks):")
+    for ps in client.pool_summaries():
+        state = "RETIRED" if ps["retired"] else f"load={ps['active']}"
+        print(f"  bucket X={ps['cfg'].X} D={ps['cfg'].D}: "
+              f"{ps['completed']} done in {ps['supersteps']} supersteps "
+              f"[{state}, idle={ps['idle_ticks']}]")
+    s = client.stats
+    print(f"\n{s.completed} results ({s.cancelled} cancelled, "
+          f"{s.deadline_evictions} deadline-evicted, "
+          f"{s.retirements} pool retirements) in {s.ticks} ticks; "
+          f"p95 admission wait {s.wait_percentile(95)} ticks; "
+          f"cross-pool fused batches: {client.core.xpool_batches} "
+          f"(max {client.core.xpool_rows_max} rows vs best single-pool "
+          f"{client.core.xpool_pool_rows_max})")
+    client.close()
 
 
 def run_frontend(args):
-    """Heterogeneous-config serving: one frontend, three config buckets."""
+    """Heterogeneous-config serving through the pre-handle adapter."""
     env = BanditTreeEnv(fanout=6, terminal_depth=12)
-    cfgs = (TreeConfig(X=512, F=6, D=8),    # deep, big arena
-            TreeConfig(X=256, F=6, D=6),    # mid
-            TreeConfig(X=128, F=6, D=4))    # shallow, latency-lean
     fe = ServiceFrontend(
         env, BanditValueBackend(), G=4, p=16,
         executor=args.executor, expansion=args.expansion,
+        policy=args.policy,
         compact_threshold=0.5, compact_exit_threshold=0.75,
     )
     for i in range(12):
         fe.submit(SearchRequest(
             uid=i, seed=i, budget=6 + 2 * (i % 4), moves=1 if i % 3 else 2,
-            cfg=cfgs[i % len(cfgs)],        # mixed shape classes
+            cfg=CFGS[i % len(CFGS)],        # mixed shape classes
         ))
     while fe.superstep():
         pool = fe.pools[fe.last_key]
         d = pool.last_decision
         mode = (f"session[{d['session']}] sub-arena G={d['G_exec']}"
                 if d["compacted"] else "masked full arena")
-        print(f"superstep {fe.stats.supersteps:3d}: "
+        print(f"tick {fe.stats.ticks:3d}: "
               f"bucket X={pool.cfg.X} D={pool.cfg.D} "
-              f"{d['A']}/{d['G']} slots active — {mode}")
+              f"{pool.load()}/{pool.G} slots active — {mode}")
     for r in sorted(fe.completed, key=lambda r: r.uid):
         print(f"req {r.uid:2d}: actions={r.actions} "
               f"reward={sum(r.rewards):+.3f} supersteps={r.supersteps}")
@@ -94,11 +168,24 @@ def main():
                     help="host-expansion engine: per-worker env.step loop, "
                          "one flattened step_batch across all slots "
                          "(vector), or a process pool of scalar workers")
+    ap.add_argument("--policy", choices=POLICY_NAMES, default="round-robin",
+                    help="global schedule policy (client/frontend modes): "
+                         "which pools advance each tick and how buckets "
+                         "admit; weighted-queue-depth gang ticks fuse ONE "
+                         "evaluate() batch across every pool")
+    ap.add_argument("--retire-after", type=int, default=12, metavar="TICKS",
+                    help="client mode: idle ticks before a cold pool "
+                         "releases its arena (resurrected on demand)")
+    ap.add_argument("--client", action="store_true",
+                    help="serve through the SearchClient handle API: "
+                         "streamed moves(), priorities, deadlines, "
+                         "cancellation, cold-pool retirement")
     ap.add_argument("--frontend", action="store_true",
                     help="serve a heterogeneous-config mix through the "
-                         "multi-arena ServiceFrontend instead of one "
-                         "single-config SearchService")
+                         "pre-handle ServiceFrontend adapter")
     args = ap.parse_args()
+    if args.client:
+        return run_client(args)
     if args.frontend:
         return run_frontend(args)
 
@@ -111,7 +198,7 @@ def main():
         executor=args.executor,  # unified stack ("reference" = numpy oracle)
         compact_threshold=0.5,   # opt-in: gather active slots when <= half
         expansion=args.expansion,  # batched host expansion (core.expand)
-    )                            # the arena is occupied (see scheduler docs)
+    )                            # the arena is occupied (see pool docs)
 
     for i in range(12):
         svc.submit(SearchRequest(
@@ -121,13 +208,14 @@ def main():
             moves=1 if i % 3 else 2,       # unevenly, so the tail of the
         ))                                 # run exercises compaction
 
+
     # drive superstep-by-superstep to trace the occupancy/compaction choice
     while svc.superstep():
         d = svc.last_decision
         mode = (f"session[{d['session']}] sub-arena G={d['G_exec']}"
                 if d["compacted"] else "masked full arena")
         print(f"superstep {svc.stats.supersteps:3d}: "
-              f"{d['A']}/{d['G']} slots active "
+              f"{svc.load()}/{d['G']} slots active "
               f"(occupancy {d['occupancy']:.2f}) — {mode}")
 
     done = svc.completed

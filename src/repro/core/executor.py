@@ -91,6 +91,7 @@ class InTreeExecutor(Protocol):
     def slot_snapshot(self, g: int) -> dict: ...
     def write_slot(self, g: int, arrays: dict) -> None: ...
     def block(self) -> None: ...
+    def release(self) -> None: ...
     def gather_sub(self, slot_idx: np.ndarray, Gc: int) -> "InTreeExecutor": ...
     def scatter_sub(self, sub: "InTreeExecutor", slot_idx: np.ndarray) -> None: ...
     def open_session(self, slot_idx: np.ndarray, Gc: int) -> "CompactionSession": ...
@@ -251,6 +252,12 @@ class JaxExecutor:
     def block(self):
         jax.block_until_ready(self.trees.size)
 
+    def release(self):
+        """Drop the arena's device arrays (cold-pool retirement).  The
+        executor is unusable afterwards — a retired pool builds a fresh
+        one on resurrection instead of reviving this object."""
+        self.trees = None
+
     # -- compaction (gather active slots into a dense sub-arena) -------
     def _spawn(self, trees: UCTree, Gc: int) -> "JaxExecutor":
         return JaxExecutor(self.cfg, Gc, self.variant, _trees=trees)
@@ -406,6 +413,9 @@ class ReferenceExecutor:
 
     def block(self):
         pass
+
+    def release(self):
+        self.trees = None
 
     # -- compaction -----------------------------------------------------
     # MutableTrees mutate in place, so the sub-executor shares the slot

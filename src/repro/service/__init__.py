@@ -1,25 +1,55 @@
-"""Multi-tree search service: config-bucketed arena pools + scheduler.
+"""Multi-tree search service: handles, global scheduler, arena pools.
 
-Three layers (see scheduler.py for the map): frontend.py routes
-heterogeneous-config requests into per-bucket pools, pool.py owns one
-bucket's arena and BSP superstep loop (with persistent compaction
-sessions), and scheduler.py keeps SearchService — the single-bucket
-compatibility surface — under its historical name.
+The public API is client-first (new names exported first):
+
+  SearchClient / SearchHandle    (client.py)   submit() -> opaque handle
+      with done()/result()/cancel()/moves() streaming, poll()/run_until()
+      progress — callers never touch pools or arenas.
+  SchedulerCore / SchedulePolicy (scheduler_core.py)   global admission
+      across config buckets (round-robin | weighted-queue-depth |
+      deadline-aware), deadline eviction, cold-pool retirement, and the
+      cross-pool fused SimulationBackend.evaluate batch.
+  ArenaPool                      (pool.py)     one bucket's G-slot arena,
+      StateTables, queue, and the BSP superstep body (split at the
+      Simulation boundary for cross-pool fusion).
+
+Compatibility adapters (deprecated surface, kept working):
+
+  ServiceFrontend (frontend.py)  pre-handle multi-bucket frontend —
+      submit() returns the routed pool; a thin veneer over SearchClient.
+  SearchService   (scheduler.py) the single-bucket service under its
+      historical name (one-time DeprecationWarning).
+  arena-executor aliases         re-exported from core.executor; the
+      repro.service.arena module itself is a lazy deprecation shim.
 """
 
-from repro.service.arena import (
-    JaxArenaExecutor, PallasArenaExecutor, ReferenceArenaExecutor,
-    make_arena_executor,
+from repro.service.client import SearchClient, SearchHandle
+from repro.service.scheduler_core import (
+    POLICY_NAMES, DeadlineAwarePolicy, RoundRobinPolicy, SchedulePolicy,
+    SchedulerCore, WeightedQueueDepthPolicy, make_policy,
+)
+from repro.service.pool import (
+    ArenaPool, MoveEvent, SearchRequest, SearchResult, ServiceStats,
 )
 from repro.service.frontend import ServiceFrontend
-from repro.service.pool import (
-    ArenaPool, SearchRequest, SearchResult, ServiceStats,
-)
 from repro.service.scheduler import SearchService
+from repro.core.executor import (
+    InTreeExecutor,
+    JaxExecutor as JaxArenaExecutor,
+    PallasExecutor as PallasArenaExecutor,
+    ReferenceExecutor as ReferenceArenaExecutor,
+    make_intree_executor as make_arena_executor,
+)
 
 __all__ = [
-    "JaxArenaExecutor", "PallasArenaExecutor", "ReferenceArenaExecutor",
-    "make_arena_executor",
-    "ArenaPool", "SearchRequest", "SearchResult", "SearchService",
-    "ServiceFrontend", "ServiceStats",
+    # new serving API first
+    "SearchClient", "SearchHandle",
+    "SchedulerCore", "SchedulePolicy", "POLICY_NAMES", "make_policy",
+    "RoundRobinPolicy", "WeightedQueueDepthPolicy", "DeadlineAwarePolicy",
+    "ArenaPool", "MoveEvent", "SearchRequest", "SearchResult",
+    "ServiceStats",
+    # compatibility surface
+    "ServiceFrontend", "SearchService",
+    "InTreeExecutor", "JaxArenaExecutor", "PallasArenaExecutor",
+    "ReferenceArenaExecutor", "make_arena_executor",
 ]

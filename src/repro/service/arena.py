@@ -1,25 +1,22 @@
-"""Tree-arena executors — compat shim over the unified stack.
+"""Deprecated tree-arena executor shim (use repro.core.executor).
 
 The two executor hierarchies this module and core.mcts used to carry
-(single-tree vs arena) are collapsed into core.executor: one
-InTreeExecutor protocol, every backend (reference / faithful / relaxed /
-wavefront / pallas) driving G >= 1 stacked tree slots under an active
-mask.  The arena-native [G]-grid Pallas kernels serve the arena directly
-now — variant="pallas" is a first-class executor, no longer gated out.
+(single-tree vs arena) were collapsed into core.executor in the unified
+executor stack PR: one InTreeExecutor protocol, every backend (reference
+/ faithful / relaxed / wavefront / pallas) driving G >= 1 stacked tree
+slots under an active mask.  The serving surface moved on again since —
+the public API is service.client.SearchClient.
 
-The old service-layer names remain importable here; new code should use
-repro.core.executor.
+The old service-layer names resolve lazily (PEP 562) with a one-time
+DeprecationWarning, so legacy imports keep working without charging
+every `import repro.service` a warning.
 """
 
 from __future__ import annotations
 
-from repro.core.executor import (
-    InTreeExecutor,
-    JaxExecutor as JaxArenaExecutor,
-    PallasExecutor as PallasArenaExecutor,
-    ReferenceExecutor as ReferenceArenaExecutor,
-    make_intree_executor,
-)
+import warnings
+
+from repro.core import executor as _executor
 from repro.core.tree import TreeConfig
 
 __all__ = [
@@ -27,6 +24,37 @@ __all__ = [
     "ReferenceArenaExecutor", "make_arena_executor", "make_intree_executor",
 ]
 
+_ALIASES = {
+    "InTreeExecutor": "InTreeExecutor",
+    "JaxArenaExecutor": "JaxExecutor",
+    "PallasArenaExecutor": "PallasExecutor",
+    "ReferenceArenaExecutor": "ReferenceExecutor",
+    "make_intree_executor": "make_intree_executor",
+}
 
-def make_arena_executor(cfg: TreeConfig, G: int, name: str) -> InTreeExecutor:
-    return make_intree_executor(cfg, G, name)
+_warned = False
+
+
+def _warn_once():
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "repro.service.arena is deprecated: import executors from "
+            "repro.core.executor (and serve through "
+            "repro.service.client.SearchClient)",
+            DeprecationWarning, stacklevel=3)
+
+
+def _make_arena_executor(cfg: TreeConfig, G: int, name: str):
+    return _executor.make_intree_executor(cfg, G, name)
+
+
+def __getattr__(name: str):
+    if name == "make_arena_executor":
+        _warn_once()
+        return _make_arena_executor
+    if name in _ALIASES:
+        _warn_once()
+        return getattr(_executor, _ALIASES[name])
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

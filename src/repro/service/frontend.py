@@ -1,42 +1,29 @@
-"""ServiceFrontend — config-bucketed arena pools behind one submit().
+"""ServiceFrontend — compatibility adapter over the SearchClient stack.
 
-The paper pins ONE tree shape per accelerator (the UCT banks are
-synthesized for a fixed X/F/D); the serving analogue long carried the
-same limit — one TreeConfig per SearchService (ROADMAP).  This frontend
-removes it by routing instead of padding-away: each SearchRequest carries
-its own TreeConfig, requests are bucketed by shape class
-(core.tree.bucket_key — exact X and D, every scoring semantic, fanout
-padded to the shared Fp lane width), and each bucket gets its own
-ArenaPool with its own arena, executor program cache and StateTables.
-Within a pool everything is the proven single-config machinery, so a
-request's per-slot evolution is bit-identical to a dedicated
-single-config SearchService run of it (tests/test_frontend.py pins this
-across every executor).
+Historical surface: one submit() returning the routed ArenaPool, a
+superstep()/run() drain loop, and aggregate stats/pool_summaries views.
+Since the SearchClient redesign the frontend owns none of that logic —
+it is a thin veneer over client.SearchClient / scheduler_core
+.SchedulerCore, which carry the routing, the SchedulePolicy (round-robin
+here by default, preserving the historical one-pool-per-tick cadence bit
+for bit), deadline eviction, cold-pool retirement and the cross-pool
+fused Simulation batch.  New code should hold SearchHandles from
+SearchClient.submit instead of pools; this adapter exists so every
+pre-redesign caller (tests, benches, examples) keeps working unchanged.
 
-Supersteps round-robin across pools: each frontend tick advances the
-next pool that has work, so every bucket keeps its one-device-program-
-per-phase batching while no bucket starves.  The host-expansion engine
-is shared across pools (one process pool / one flattening path per
-frontend, not per bucket).
-
-Mirsoleimani et al.'s *Structured Parallel Programming for MCTS* argues
-the scheduler, not the tree ops, should own the parallel structure —
-here that split is literal: the frontend owns routing + interleaving,
-the pools own the BSP supersteps, core.executor owns the device phases.
+The layer map lives in service/client.py; the scheduling design in
+service/scheduler_core.py.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
-import numpy as np
-
-from repro.core.expand import ExpansionEngine
 from repro.core.mcts import Environment, SimulationBackend
-from repro.core.tree import TreeConfig, bucket_key, canonical_config
-from repro.service.pool import (
-    ArenaPool, SearchRequest, SearchResult, ServiceStats,
-)
+from repro.core.tree import TreeConfig
+from repro.service.client import SearchClient
+from repro.service.pool import ArenaPool, SearchRequest, SearchResult
+from repro.service.scheduler_core import SchedulePolicy
 
 __all__ = ["ServiceFrontend"]
 
@@ -47,7 +34,9 @@ class ServiceFrontend:
     Pools are created lazily, one per request-config bucket, each with
     `G` slots and the frontend-wide executor / compaction / expansion
     settings.  `default_cfg` (optional) serves requests that carry no
-    config of their own.
+    config of their own.  `policy` / `retire_after_ticks` pass through to
+    the scheduler core (round-robin and no retirement by default — the
+    historical behavior).
     """
 
     def __init__(
@@ -64,107 +53,87 @@ class ServiceFrontend:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        policy: Union[str, SchedulePolicy] = "round-robin",
+        retire_after_ticks: Optional[int] = None,
     ):
-        self.env, self.sim = env, sim
-        self.G, self.p = G, p
-        self.executor = executor
-        self.default_cfg = default_cfg
-        self._pool_kw = dict(
-            alternating_signs=alternating_signs,
-            reuse_subtree=reuse_subtree,
+        self.client = SearchClient(
+            env, sim, G=G, p=p, executor=executor, default_cfg=default_cfg,
+            policy=policy, retire_after_ticks=retire_after_ticks,
+            alternating_signs=alternating_signs, reuse_subtree=reuse_subtree,
             compact_threshold=compact_threshold,
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
-        )
-        # ONE host-expansion engine (and process pool, in "pool" mode)
-        # shared by every bucket
-        self.expander = ExpansionEngine(env, expansion)
-        self.pools: dict[tuple, ArenaPool] = {}
-        self._order: list[tuple] = []   # bucket keys in creation order
-        self._rr = 0                    # round-robin cursor into _order
-        self.last_key = None            # bucket of the latest superstep
+            expansion=expansion)
+        self.core = self.client.core
+
+    # ---- historical attribute surface (delegated) ----
+    @property
+    def env(self):
+        return self.core.env
+
+    @property
+    def sim(self):
+        return self.core.sim
+
+    @property
+    def G(self):
+        return self.core.G
+
+    @property
+    def p(self):
+        return self.core.p
+
+    @property
+    def executor(self):
+        return self.core.executor
+
+    @property
+    def default_cfg(self):
+        return self.core.default_cfg
+
+    @property
+    def expander(self):
+        return self.core.expander
+
+    @property
+    def pools(self) -> dict:
+        return self.core.pools
+
+    @property
+    def last_key(self):
+        return self.core.last_key
 
     # ---- routing ----
-    def _pool_for(self, cfg: TreeConfig) -> ArenaPool:
-        key = bucket_key(cfg)
-        pool = self.pools.get(key)
-        if pool is None:
-            pool = ArenaPool(
-                canonical_config(cfg), self.env, self.sim, self.G, self.p,
-                executor=self.executor, expander=self.expander,
-                **self._pool_kw)
-            self.pools[key] = pool
-            self._order.append(key)
-        return pool
-
     def submit(self, req: SearchRequest) -> ArenaPool:
         """Route a request to the ArenaPool serving its config bucket
-        (created on first use).  Returns the pool, mostly for tests."""
-        cfg = req.cfg if req.cfg is not None else self.default_cfg
-        if cfg is None:
-            raise ValueError(
-                f"request uid={req.uid} carries no TreeConfig and the "
-                f"frontend has no default_cfg")
-        if req.cfg is None:
-            req.cfg = cfg
-        pool = self._pool_for(cfg)
-        pool.submit(req)
-        return pool
+        (created on first use).  Returns the pool for compatibility;
+        callers that want a handle should use SearchClient.submit."""
+        handle = self.client.submit(req)
+        return self.core.pools[handle._key]
 
-    # ---- round-robin superstep across buckets ----
+    # ---- scheduler ticks ----
     def superstep(self) -> bool:
-        """Advance the next pool (round-robin) that has queued or active
-        work by one BSP superstep.  False when every pool is drained."""
-        n = len(self._order)
-        for off in range(n):
-            key = self._order[(self._rr + off) % n]
-            pool = self.pools[key]
-            if pool.has_work() and pool.superstep():
-                self._rr = (self._rr + off + 1) % n
-                self.last_key = key
-                return True
-        return False
+        """One global scheduler tick (round-robin default: advance the
+        next pool with work).  False when every pool is drained."""
+        return self.core.tick()
 
     def run(self, max_supersteps: int = 100_000) -> list[SearchResult]:
-        steps = 0
-        while steps < max_supersteps and self.superstep():
-            steps += 1
-        return self.completed
+        return self.core.run(max_supersteps)
 
     # ---- aggregate views ----
     @property
     def completed(self) -> list[SearchResult]:
-        done: list[SearchResult] = []
-        for key in self._order:
-            done.extend(self.pools[key].completed)
-        return done
+        return self.core.completed
 
     @property
-    def stats(self) -> ServiceStats:
+    def stats(self):
         """Frontend-wide aggregate of every pool's counters."""
-        total = ServiceStats()
-        for pool in self.pools.values():
-            total = total.merge(pool.stats)
-        return total
+        return self.core.stats
 
     def pool_summaries(self) -> list[dict]:
-        """Per-bucket one-liners: shape class, load, session counters."""
-        out = []
-        for key in self._order:
-            pool = self.pools[key]
-            s = pool.stats
-            out.append({
-                "bucket": key, "cfg": pool.cfg, "G": pool.G,
-                "queued": len(pool.queue),
-                "active": int(np.sum(pool._active())),
-                "supersteps": s.supersteps, "completed": s.completed,
-                "session_gathers": s.session_gathers,
-                "session_scatters": s.session_scatters,
-                "session_reuses": s.session_reuses,
-            })
-        return out
+        """Per-bucket one-liners: shape class, load (via the public
+        ArenaPool.load accessor), session counters."""
+        return self.core.pool_summaries()
 
     def close(self):
-        for pool in self.pools.values():
-            pool.close()          # flushes sessions; engine is shared
-        self.expander.close()     # ... so the frontend closes it once
+        self.client.close()

@@ -1,21 +1,44 @@
-"""ArenaPool — one config bucket's arena, state tables and superstep loop.
+"""ArenaPool — one config bucket's arena, state tables and superstep body.
 
-Middle layer of the service stack (frontend.py routes requests here,
-scheduler.py's SearchService is the single-bucket compatibility wrapper):
-an ArenaPool owns ONE TreeConfig shape class — a G-slot tree arena on one
-InTreeExecutor, the per-slot StateTables, a host-expansion engine and the
-admission queue — and advances every occupied slot through one BSP
-superstep per tick (Selection / Insertion / host expansion / fused
-Simulation / BackUp, one device program per phase).
+Middle layer of the service stack.  The three layers after the
+SearchClient redesign (client.py has the map):
+
+  client.py          SearchClient / SearchHandle — the public serving API:
+                     opaque request handles, streamed per-move events,
+                     poll/run_until instead of drain-only run().
+  scheduler_core.py  SchedulerCore + SchedulePolicy — global admission
+                     across buckets, cold-pool retirement, and the
+                     cross-pool fused Simulation batch.
+  this module        ArenaPool — one TreeConfig shape class: a G-slot tree
+                     arena on one InTreeExecutor, the per-slot
+                     StateTables, admission queue, and the BSP superstep
+                     body (Selection / Insertion / host expansion / fused
+                     Simulation / BackUp, one device program per phase).
 
 Lifecycle of a request:
   queued -> admitted into a free slot (fresh tree + ST, root = seed state)
          -> superstepped until its per-move budget / node cap / saturation
-         -> move committed (robust child), then either
+         -> move committed (robust child) and emitted as a MoveEvent to
+            the pool's move listener (the client's streaming moves()
+            surface), then either
               * evicted with its action trace + root visit distributions, or
               * advanced in place: core.reroot extracts the chosen child's
                 subtree (statistics preserved) and the search continues on
                 the same slot for its next move.
+  A request can also leave early: `cancel(uid)` removes it from the queue
+  or frees its slot mid-flight (partial moves are kept on the result),
+  and the scheduler core uses the same path for deadline eviction.
+
+The superstep body is split so a scheduler can fuse Simulation across
+pools: `begin_superstep()` runs admission, Selection, Insertion and host
+expansion and returns the pending step with its simulation rows;
+`finish_superstep(pending, values, priors)` scatters the evaluated
+values back through finalize / BackUp / move commit.  `superstep()` is
+begin + this pool's own `sim.evaluate` + finish — the single-pool case.
+Sim-state shapes are env-, not config-, dependent, so a SchedulerCore
+serving several shape classes concatenates every pool's pending rows
+into ONE `SimulationBackend.evaluate` call per tick and splits the
+results back (the cross-pool analogue of the within-pool worker fusion).
 
 Requests may carry their own TreeConfig: any config in the pool's bucket
 (core.tree.bucket_key — same X/D/semantics, fanout padded to the shared
@@ -29,14 +52,20 @@ the enter threshold the pool opens a persistent CompactionSession
 pow2-padded sub-arena that stays device-resident across supersteps, with
 the scatter back deferred to session close or snapshot reads
 (dirty-tracking).  The session is invalidated only on membership changes
-— admission, eviction, or a reroot rewriting a member slot — so a stable
-active set pays one gather + one scatter total instead of one per
-superstep (the per-superstep re-gather was a measured net loss in
-BENCH_service.json; `persistent_compaction=False` restores it for
-comparison).  A separate exit threshold (hysteresis) keeps occupancy
-oscillating around the enter threshold from thrashing gather/scatter.
-Per-slot arithmetic is position-independent, so masked, per-superstep
-compacted and session execution are all bit-identical.
+— admission, eviction, cancellation, or a reroot rewriting a member slot
+— so a stable active set pays one gather + one scatter total instead of
+one per superstep.  A separate exit threshold (hysteresis) keeps
+occupancy oscillating around the enter threshold from thrashing
+gather/scatter.  Per-slot arithmetic is position-independent, so masked,
+per-superstep compacted and session execution are all bit-identical.
+
+Cold pools retire: an idle pool's `retire()` closes its session and
+releases the arena and StateTables (executor.release()), keeping only
+queue/stat/result state; the next submit resurrects it with a fresh
+arena.  Retirement is safe exactly because it is only legal when no slot
+is occupied — completed results and counters survive, tree state has
+nothing live to lose.  The scheduler core drives this off an
+idle-superstep TTL (the ROADMAP "bucket arenas are never retired" item).
 
 Determinism: with a deterministic SimulationBackend the per-slot tree
 evolution is bit-identical to a single-tree TreeParallelMCTS run of the
@@ -48,26 +77,28 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
 from repro.core import fixedpoint as fx
 from repro.core import reroot
-from repro.core.executor import CompactionSession
+from repro.core.executor import CompactionSession, make_intree_executor
 from repro.core.expand import ExpansionEngine
 from repro.core.mcts import Environment, SimulationBackend
 from repro.core.state_table import StateTable
 from repro.core.tree import NULL, TreeConfig, bucket_key
-from repro.service.arena import make_arena_executor
 
 
 @dataclasses.dataclass
 class SearchRequest:
     """One user search: plan `moves` actions from the seed state, spending
     up to `budget` supersteps of p simulations per move.  `cfg` is the
-    request's own tree shape — the frontend routes on it; None means "the
-    serving pool's config"."""
+    request's own tree shape — the scheduler routes on it; None means "the
+    serving pool's config".  `priority` breaks admission ties (higher
+    first, FIFO within a class); `deadline_supersteps` is a global-tick
+    budget after which the scheduler core evicts the request with
+    whatever moves it has committed."""
 
     uid: int
     seed: int
@@ -76,6 +107,10 @@ class SearchRequest:
     keep_tree: bool = False      # attach the final tree snapshot to the result
     cfg: Optional[TreeConfig] = None
     submitted_at: float = 0.0
+    priority: int = 0
+    deadline_supersteps: Optional[int] = None
+    submit_tick: int = -1        # global tick at submission (set by scheduler)
+    deadline_tick: Optional[int] = None  # absolute eviction tick (set by core)
 
 
 @dataclasses.dataclass
@@ -89,6 +124,22 @@ class SearchResult:
     tree_snapshot: Optional[dict] = None
     submitted_at: float = 0.0
     done_at: float = 0.0
+    cancelled: bool = False          # cancel() or deadline eviction
+    deadline_evicted: bool = False   # the cancel came from a deadline
+
+
+@dataclasses.dataclass
+class MoveEvent:
+    """One committed move of one request, emitted as the reroot commits —
+    the streaming unit of SearchHandle.moves().  `last` marks the
+    request's final move (its SearchResult is complete)."""
+
+    uid: int
+    move_index: int
+    action: int
+    reward: float
+    visit_counts: np.ndarray     # root visit distribution, [F]
+    last: bool = False
 
 
 @dataclasses.dataclass
@@ -103,12 +154,36 @@ class _Slot:
 
 
 @dataclasses.dataclass
+class _PendingStep:
+    """A superstep paused at the Simulation boundary: everything
+    begin_superstep computed that finish_superstep needs, plus the fused
+    sim rows a scheduler may batch across pools."""
+
+    ex: object                   # executor chosen for this tick (arena or sub)
+    ex_active: np.ndarray
+    rows: np.ndarray             # executor row of each active slot
+    act_idx: np.ndarray          # arena slot id of each active slot
+    sel_dev: object
+    hx: dict                     # {slot: HostExpansion}
+    sim_states: np.ndarray       # [sum_p, ...] fused Simulation inputs
+    t_intree: float = 0.0        # begin-side wall, folded into the pool's
+    t_host: float = 0.0          # timing stats at finish time
+
+
+@dataclasses.dataclass
 class ServiceStats:
     supersteps: int = 0
+    ticks: int = 0               # scheduler ticks observed (monotonic; a
+    #                              bare pool counts its own superstep calls,
+    #                              a SchedulerCore overwrites the aggregate
+    #                              with its global tick clock)
     admitted: int = 0
     completed: int = 0
+    cancelled: int = 0           # cancel() evictions (deadline ones included)
+    deadline_evictions: int = 0
+    retirements: int = 0         # cold-pool arena releases
     sim_rows: int = 0            # fused simulation-batch rows evaluated
-    sim_batches: int = 0         # evaluate() calls (one per superstep)
+    sim_batches: int = 0         # evaluate() calls this pool issued itself
     max_fused_rows: int = 0
     compacted_supersteps: int = 0  # supersteps run on a gathered sub-arena
     session_gathers: int = 0     # CompactionSession opens (arena -> sub copy)
@@ -119,16 +194,41 @@ class ServiceStats:
     t_host: float = 0.0          # ST / env expansion + scheduling bookkeeping
     t_expand: float = 0.0        # expansion-engine share of t_host
     t_sim: float = 0.0
+    # admission-wait histogram: {ticks_waited: n_requests}.  The per-tick
+    # information ServiceStats.merge used to lose — fairness metrics
+    # (p95 wait per pool and across pools) read this directly.
+    wait_supersteps: dict = dataclasses.field(default_factory=dict)
 
     def merge(self, other: "ServiceStats") -> "ServiceStats":
-        """Aggregate across pools (frontend summary); max_fused_rows is a
-        max, everything else sums."""
+        """Aggregate across pools (scheduler summary): max_fused_rows is a
+        max, wait_supersteps histograms add per bucket, everything else
+        sums."""
         out = ServiceStats()
         for f in dataclasses.fields(ServiceStats):
             a, b = getattr(self, f.name), getattr(other, f.name)
-            setattr(out, f.name,
-                    max(a, b) if f.name == "max_fused_rows" else a + b)
+            if f.name == "max_fused_rows":
+                out.max_fused_rows = max(a, b)
+            elif f.name == "wait_supersteps":
+                hist = dict(a)
+                for k, v in b.items():
+                    hist[k] = hist.get(k, 0) + v
+                out.wait_supersteps = hist
+            else:
+                setattr(out, f.name, a + b)
         return out
+
+    def wait_percentile(self, q: float) -> int:
+        """q-th percentile (0..100) of the admission-wait histogram."""
+        total = sum(self.wait_supersteps.values())
+        if total == 0:
+            return 0
+        need = q / 100.0 * total
+        seen = 0
+        for wait in sorted(self.wait_supersteps):
+            seen += self.wait_supersteps[wait]
+            if seen >= need:
+                return wait
+        return max(self.wait_supersteps)
 
 
 class ArenaPool:
@@ -153,12 +253,13 @@ class ArenaPool:
     ):
         self.cfg, self.env, self.sim = cfg, env, sim
         self.G, self.p = G, p
+        self.executor_name = executor
         self.alternating_signs = alternating_signs
         self.reuse_subtree = reuse_subtree
         # host-expansion engine: "loop" per-worker env.step, "vector" ONE
         # flattened step_batch over all slots' pending expansions, "pool"
         # the process-pool scalar fallback (core.expand) — bit-identical.
-        # A frontend serving several pools passes one shared engine in.
+        # A scheduler serving several pools passes one shared engine in.
         self._owns_expander = expander is None
         self.expander = ExpansionEngine(env, expansion) if expander is None \
             else expander
@@ -178,7 +279,7 @@ class ArenaPool:
         # (scatter only on membership change / snapshot read); False
         # restores the per-superstep gather/scatter for comparison
         self.persistent_compaction = persistent_compaction
-        self.exec = make_arena_executor(cfg, G, executor)
+        self.exec = make_intree_executor(cfg, G, executor)
         self.sts = [StateTable(cfg.X, env.state_shape, env.state_dtype)
                     for _ in range(G)]
         self.slots: list[Optional[_Slot]] = [None] * G
@@ -188,6 +289,18 @@ class ArenaPool:
         self.last_decision: dict = {}   # per-superstep occupancy/compaction
         self._session: Optional[CompactionSession] = None
         self._compacting = False        # hysteresis state
+        # scheduler hooks: a SchedulerCore installs its global tick clock
+        # (admission-wait attribution), an admission cap (per-bucket G
+        # sizing), deadline-first admission order, and the move/result
+        # listeners the client's handle surface is built on
+        self.clock: Optional[Callable[[], int]] = None
+        self.admit_limit: Optional[int] = None
+        self.deadline_first = False
+        self.move_listener: Optional[Callable[[MoveEvent], None]] = None
+        self.result_listener: Optional[Callable[[SearchResult], None]] = None
+        # cold-pool retirement state (see retire())
+        self.retired = False
+        self.idle_ticks = 0
         # fixed per-slot finalize width (vmapped finalize needs one shape)
         self.K = p * cfg.Fp if cfg.expand_all else p
 
@@ -197,35 +310,124 @@ class ArenaPool:
             raise ValueError(
                 f"request uid={req.uid} config {req.cfg} is outside this "
                 f"pool's bucket {bucket_key(self.cfg)} — route it through "
-                f"service.frontend.ServiceFrontend")
+                f"service.client.SearchClient")
         if not req.submitted_at:
             req.submitted_at = time.perf_counter()
+        if req.submit_tick < 0:
+            req.submit_tick = self._now()
+        if self.retired:
+            self._resurrect()
         self.queue.append(req)
 
+    def _now(self) -> int:
+        return self.clock() if self.clock is not None else self.stats.ticks
+
+    def _admit_rank(self, req: SearchRequest, i: int) -> tuple:
+        """Admission order: priority class first; within a class, earliest
+        deadline first when the scheduler policy asked for it
+        (deadline_first), else strict FIFO.  Default requests (priority 0,
+        no deadlines) reduce to the original FIFO pop."""
+        urgency = (-req.deadline_tick
+                   if self.deadline_first and req.deadline_tick is not None
+                   else float("-inf"))
+        return (req.priority, urgency, -i)
+
     def _admit(self):
+        limit = self.G if self.admit_limit is None \
+            else max(0, min(self.admit_limit, self.G))
+        active = sum(s is not None for s in self.slots)
         for g in range(self.G):
-            if self.slots[g] is not None or not self.queue:
+            if self.slots[g] is not None:
                 continue
-            req = self.queue.pop(0)
-            res = SearchResult(uid=req.uid, submitted_at=req.submitted_at)
-            s0 = self.env.initial_state(req.seed)
-            na = self.env.num_actions(s0)
-            if na == 0:  # degenerate: nothing to search
-                res.terminal = True
-                self._finish(res)
-                continue
-            self.exec.reset_slot(g, na)
-            self.sts[g].flush(s0)
-            self.slots[g] = _Slot(req=req, res=res, root_state=s0,
-                                  cfg=req.cfg if req.cfg is not None
-                                  else self.cfg)
-            self.stats.admitted += 1
+            while self.queue and active < limit:
+                i = max(range(len(self.queue)),
+                        key=lambda j: self._admit_rank(self.queue[j], j))
+                req = self.queue.pop(i)
+                res = SearchResult(uid=req.uid, submitted_at=req.submitted_at)
+                s0 = self.env.initial_state(req.seed)
+                na = self.env.num_actions(s0)
+                if na == 0:  # degenerate: nothing to search
+                    res.terminal = True
+                    self._finish(res)
+                    continue
+                self.exec.reset_slot(g, na)
+                self.sts[g].flush(s0)
+                self.slots[g] = _Slot(req=req, res=res, root_state=s0,
+                                      cfg=req.cfg if req.cfg is not None
+                                      else self.cfg)
+                self.stats.admitted += 1
+                wait = max(0, self._now() - max(req.submit_tick, 0))
+                self.stats.wait_supersteps[wait] = (
+                    self.stats.wait_supersteps.get(wait, 0) + 1)
+                active += 1
+                break
 
     def _active(self) -> np.ndarray:
         return np.array([s is not None for s in self.slots], bool)
 
+    def load(self) -> int:
+        """Occupied-slot count — the public load accessor (frontends and
+        schedulers must not reach into _active)."""
+        return int(np.sum(self._active()))
+
     def has_work(self) -> bool:
-        return bool(self.queue) or bool(self._active().any())
+        return bool(self.queue) or any(s is not None for s in self.slots)
+
+    # ---- cancellation (client cancel / scheduler deadline eviction) ----
+    def cancel(self, uid: int, reason: str = "cancel") -> bool:
+        """Evict a request before it completes.  Queued requests leave
+        with an empty (cancelled) result; an in-flight request keeps the
+        moves it already committed.  Returns False when the uid is not
+        queued or active here (already done, or never submitted)."""
+        for i, req in enumerate(self.queue):
+            if req.uid == uid:
+                self.queue.pop(i)
+                res = SearchResult(uid=uid, submitted_at=req.submitted_at)
+                self._mark_cancelled(res, reason)
+                self._finish(res)
+                return True
+        for g, slot in enumerate(self.slots):
+            if slot is not None and slot.req.uid == uid:
+                # freeing the slot is a membership change: a resident
+                # session spanning it must scatter + close first
+                self._invalidate_session(g)
+                self._mark_cancelled(slot.res, reason)
+                self._finish(slot.res)
+                self.slots[g] = None
+                return True
+        return False
+
+    def _mark_cancelled(self, res: SearchResult, reason: str):
+        res.cancelled = True
+        self.stats.cancelled += 1
+        if reason == "deadline":
+            res.deadline_evicted = True
+            self.stats.deadline_evictions += 1
+
+    # ---- cold-pool retirement ----
+    def retire(self) -> bool:
+        """Release the arena and StateTables of an idle pool (queue empty,
+        no occupied slot): the CompactionSession closes, the executor's
+        device arrays are released, and only queue/result/stat state
+        remains.  The next submit resurrects the pool with a fresh arena —
+        legal precisely because nothing live was resident."""
+        if self.retired or self.has_work():
+            return False
+        self._close_session()
+        self.exec.release()
+        self.exec = None
+        self.sts = None
+        self.retired = True
+        self.stats.retirements += 1
+        return True
+
+    def _resurrect(self):
+        self.exec = make_intree_executor(self.cfg, self.G, self.executor_name)
+        self.sts = [StateTable(self.cfg.X, self.env.state_shape,
+                               self.env.state_dtype) for _ in range(self.G)]
+        self.retired = False
+        self.idle_ticks = 0
+        self._compacting = False   # fresh arena, fresh hysteresis state
 
     # ---- session plumbing ----
     def _close_session(self):
@@ -302,39 +504,55 @@ class ArenaPool:
                     np.arange(A), act_idx)
         return self.exec, active, act_idx, act_idx
 
-    # ---- one fused superstep over all occupied slots ----
-    def superstep(self) -> bool:
+    # ---- superstep, paused at the Simulation boundary ----
+    def begin_superstep(self) -> Optional[_PendingStep]:
+        """Admission + Selection + Insertion + host expansion.  Returns
+        the pending step carrying the fused simulation rows, or None when
+        no slot is occupied.  The caller evaluates the rows (alone or
+        fused with other pools') and hands them to finish_superstep."""
+        self.stats.ticks += 1
         self._admit()
         active = self._active()
         if not active.any():
-            return False
-        p, cfg = self.p, self.cfg
+            return None
         t0 = time.perf_counter()
-
         ex, ex_active, rows, act_idx = self._pick_execution(active)
-        Ge = ex.G
-        sel_dev = ex.selection(ex_active, p)
+        sel_dev = ex.selection(ex_active, self.p)
         sel = ex.sel_to_host(sel_dev)                         # [Ge, p, ...]
         new_nodes = ex.insert(ex_active, sel_dev)             # [Ge, p, Fp]
         t1 = time.perf_counter()
 
         # host expansion: every slot's pending expansions through the
-        # engine (one flattened env batch in vector/pool mode), then ONE
-        # fused Simulation batch
+        # engine (one flattened env batch in vector/pool mode); the fused
+        # Simulation rows are the pending step's hand-off
         hx = self.expander.expand(
             [(g, self.sts[g], {k: v[r] for k, v in sel.items()},
               new_nodes[r]) for r, g in zip(rows, act_idx)])
         t_x = time.perf_counter()
         self.stats.t_expand += t_x - t1
-        fused = np.concatenate([hx[g].sim_states for g in act_idx])
+        sim_states = np.concatenate([hx[g].sim_states for g in act_idx])
         t2 = time.perf_counter()
-        values, priors = self.sim.evaluate(fused)
-        t3 = time.perf_counter()
-        self.stats.sim_rows += len(fused)
-        self.stats.sim_batches += 1
-        self.stats.max_fused_rows = max(self.stats.max_fused_rows, len(fused))
+        return _PendingStep(
+            ex=ex, ex_active=ex_active, rows=rows, act_idx=act_idx,
+            sel_dev=sel_dev, hx=hx, sim_states=sim_states,
+            t_intree=t1 - t0, t_host=t2 - t1)
 
-        # split fused results, finalize + BackUp across all slots at once
+    def finish_superstep(self, pend: _PendingStep, values, priors,
+                         t_sim: float = 0.0, own_batch: bool = True):
+        """Scatter evaluated values back: finalize + BackUp across all
+        slots at once, then commit any finished moves.  `own_batch` is
+        False when a scheduler core evaluated this pool's rows inside a
+        cross-pool fused batch (the core counts that batch once)."""
+        ex, rows, act_idx = pend.ex, pend.rows, pend.act_idx
+        p, cfg = self.p, self.cfg
+        Ge = ex.G
+        self.stats.sim_rows += len(pend.sim_states)
+        self.stats.t_sim += t_sim
+        if own_batch:
+            self.stats.sim_batches += 1
+        self.stats.max_fused_rows = max(self.stats.max_fused_rows,
+                                        len(pend.sim_states))
+        t3 = time.perf_counter()
         values_fx = np.asarray(fx.encode(np.asarray(values)), np.int32)
         fin_nodes = np.full((Ge, self.K), NULL, np.int32)
         fin_na = np.zeros((Ge, self.K), np.int32)
@@ -347,13 +565,14 @@ class ArenaPool:
             row = slice(i * p, (i + 1) * p)
             pr = priors[row] if priors is not None else None
             (fin_nodes[r], fin_na[r], fin_term[r], fin_pp[r],
-             fin_pf[r]) = hx[g].padded_finalize_args(self.K, p, cfg.Fp, pr)
-            sim_nodes[r] = hx[g].sim_nodes
+             fin_pf[r]) = pend.hx[g].padded_finalize_args(self.K, p, cfg.Fp,
+                                                          pr)
+            sim_nodes[r] = pend.hx[g].sim_nodes
             vals[r] = values_fx[row]
         t4 = time.perf_counter()
 
         ex.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
-        ex.backup(ex_active, sel_dev, sim_nodes, vals,
+        ex.backup(pend.ex_active, pend.sel_dev, sim_nodes, vals,
                   self.alternating_signs)
         if ex is not self.exec:
             self.stats.compacted_supersteps += 1
@@ -364,11 +583,20 @@ class ArenaPool:
 
         self.stats.supersteps += 1
         self.stats.occupancy_sum += len(act_idx) / self.G
-        self.stats.t_intree += (t1 - t0) + (t5 - t4)
-        self.stats.t_host += (t2 - t1) + (t4 - t3)
-        self.stats.t_sim += t3 - t2
+        self.stats.t_intree += pend.t_intree + (t5 - t4)
+        self.stats.t_host += pend.t_host + (t4 - t3)
 
         self._commit_moves(act_idx)
+
+    # ---- one fused superstep over all occupied slots ----
+    def superstep(self) -> bool:
+        pend = self.begin_superstep()
+        if pend is None:
+            return False
+        t2 = time.perf_counter()
+        values, priors = self.sim.evaluate(pend.sim_states)
+        t_sim = time.perf_counter() - t2
+        self.finish_superstep(pend, values, priors, t_sim=t_sim)
         return True
 
     # ---- move boundary: commit / advance / evict ----
@@ -406,7 +634,12 @@ class ArenaPool:
         slot.res.rewards.append(float(reward))
         slot.res.visit_counts.append(counts)
         slot.moves_done += 1
-        if term or slot.moves_done >= slot.req.moves:
+        last = bool(term) or slot.moves_done >= slot.req.moves
+        if self.move_listener is not None:
+            self.move_listener(MoveEvent(
+                uid=slot.req.uid, move_index=slot.moves_done - 1, action=a,
+                reward=float(reward), visit_counts=counts, last=last))
+        if last:
             slot.res.terminal = bool(term)
             if slot.req.keep_tree:
                 slot.res.tree_snapshot = snap
@@ -431,6 +664,8 @@ class ArenaPool:
         res.done_at = time.perf_counter()
         self.completed.append(res)
         self.stats.completed += 1
+        if self.result_listener is not None:
+            self.result_listener(res)
 
     # ---- drive to completion ----
     def run(self, max_supersteps: int = 100_000) -> list[SearchResult]:

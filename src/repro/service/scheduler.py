@@ -1,24 +1,28 @@
-"""SearchService — single-bucket compatibility wrapper over ArenaPool.
+"""SearchService — deprecated single-bucket wrapper over ArenaPool.
 
-The service stack is three layers now (multi-arena frontend refactor):
+The service stack is client-first now (see service/client.py for the
+layer map):
 
-  frontend.py   ServiceFrontend — accepts requests carrying their own
-                TreeConfig, buckets them by shape class
-                (core.tree.bucket_key: same X/D/semantics, fanout padded
-                to a shared Fp lane width) into per-bucket arena pools,
-                and round-robins supersteps across pools.
-  pool.py       ArenaPool — one bucket's G-slot arena + StateTables +
-                expansion engine + admission queue; the BSP superstep
-                (Selection / Insertion / host expansion / fused
-                Simulation / BackUp), move commit / reroot advance /
-                eviction, and the occupancy decision with persistent
-                CompactionSessions (core.executor) and hysteresis.
-  this module   SearchService — ArenaPool under its historical name and
-                signature: the one-config service every existing test,
-                bench and example was written against.  It IS an
-                ArenaPool (subclass adding nothing), so the scheduler
-                surface — submit/superstep/run, stats, last_decision,
-                exec — is unchanged.
+  client.py          SearchClient / SearchHandle — the public API:
+                     opaque handles (done/result/cancel/moves), poll and
+                     run_until instead of a drain-only run().
+  scheduler_core.py  SchedulerCore + SchedulePolicy — global admission
+                     across config buckets, deadline eviction, cold-pool
+                     retirement, cross-pool fused Simulation batches.
+  pool.py            ArenaPool — one bucket's G-slot arena + StateTables
+                     + admission queue; the BSP superstep body
+                     (Selection / Insertion / host expansion / fused
+                     Simulation / BackUp) split at the Simulation
+                     boundary so the core can batch across pools.
+  frontend.py        ServiceFrontend — the pre-handle compatibility
+                     adapter (submit returns the routed pool).
+  this module        SearchService — ArenaPool under its historical name
+                     and signature: the one-config service every legacy
+                     test, bench and example was written against.  It
+                     emits a one-time DeprecationWarning pointing at
+                     SearchClient; the scheduler surface — submit/
+                     superstep/run, stats, last_decision, exec — is
+                     otherwise unchanged.
 
 Mirrors serving/batcher.py's slot pattern one level up the stack: the
 pool is a TreeArena of G slots instead of a KV-cache pool, a request is a
@@ -31,6 +35,8 @@ See pool.py for the lifecycle and compaction details.
 
 from __future__ import annotations
 
+import warnings
+
 from repro.service.pool import (
     ArenaPool, SearchRequest, SearchResult, ServiceStats,
 )
@@ -40,8 +46,22 @@ __all__ = ["ArenaPool", "SearchRequest", "SearchResult", "SearchService",
 
 
 class SearchService(ArenaPool):
-    """G-slot multi-tree MCTS server for ONE TreeConfig (one host, one
-    device program per phase) — the single-bucket special case of the
-    frontend/pool stack.  Heterogeneous request configs need
-    service.frontend.ServiceFrontend, which routes each request to the
-    ArenaPool serving its bucket."""
+    """G-slot multi-tree MCTS server for ONE TreeConfig — the deprecated
+    single-bucket special case of the client/scheduler/pool stack.  New
+    code should submit through service.client.SearchClient, which routes
+    heterogeneous request configs, returns opaque SearchHandles, and
+    schedules across buckets (policies, deadlines, retirement, cross-pool
+    fused simulation)."""
+
+    _warned = False      # one-time deprecation notice per process
+
+    def __init__(self, *args, **kwargs):
+        if not SearchService._warned:
+            SearchService._warned = True
+            warnings.warn(
+                "SearchService is deprecated: use "
+                "repro.service.client.SearchClient (opaque SearchHandles, "
+                "poll/run_until, schedule policies) — SearchService remains "
+                "as a single-bucket compatibility wrapper only",
+                DeprecationWarning, stacklevel=2)
+        super().__init__(*args, **kwargs)

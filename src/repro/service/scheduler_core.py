@@ -1,0 +1,440 @@
+"""SchedulerCore — global cross-pool scheduling behind the SearchClient.
+
+Mirsoleimani et al.'s *Structured Parallel Programming for MCTS* argues
+the scheduler, not the tree ops, should own parallel structure; the
+paper's own CPU workers talk to the accelerator through a narrow
+request/response interface and never see tree internals.  This module is
+that split made literal for the serving layer: ArenaPool owns one shape
+class's BSP superstep body, and everything that spans buckets lives here
+
+  * routing      — requests are bucketed by shape class
+                   (core.tree.bucket_key: exact X/D/semantics, fanout
+                   padded to the shared Fp lane width) into lazily
+                   created ArenaPools, all sharing ONE host-expansion
+                   engine;
+  * admission    — a pluggable SchedulePolicy decides which pools advance
+                   each global tick and how many slots each bucket may
+                   fill (per-bucket G sizing from queue depth — the
+                   cross-bucket fairness lever the ROADMAP named);
+  * simulation   — sim-state shapes are env-, not config-, dependent, so
+                   a gang tick concatenates every advancing pool's
+                   pending rows into ONE SimulationBackend.evaluate call
+                   and splits the results back per pool (the cross-pool
+                   fusion that used to stop at pool boundaries);
+  * deadlines    — requests carrying deadline_supersteps are evicted (via
+                   ArenaPool.cancel) at the first tick past their budget,
+                   keeping whatever moves they committed;
+  * retirement   — a pool idle for `retire_after_ticks` global ticks
+                   closes its CompactionSession and releases its arena
+                   (executor.release()); the next submit to its bucket
+                   resurrects it.  Bounds arena memory under config churn.
+
+Policies:
+
+  round-robin          — one pool per tick, rotating: bit-identical to
+                         the historical ServiceFrontend loop (the
+                         compatibility default).
+  weighted-queue-depth — a gang tick: every pool with work advances,
+                         deepest queue first, with per-bucket admission
+                         caps proportional to queue-depth share; the
+                         cross-pool fused evaluate batch comes from here.
+  deadline-aware       — the pool holding the most urgent deadline
+                         advances first each tick, and its admission
+                         order prefers earlier deadlines within a
+                         priority class.
+
+Scheduling never changes what a request computes — per-slot tree
+evolution is schedule-independent (tests/test_executor_matrix.py), so
+every policy, fused or not, returns bit-identical per-request results;
+policies only move WHEN work happens (fairness, deadlines, batch shape).
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core.expand import ExpansionEngine
+from repro.core.mcts import Environment, SimulationBackend
+from repro.core.tree import TreeConfig, bucket_key, canonical_config
+from repro.service.pool import (
+    ArenaPool, MoveEvent, SearchRequest, SearchResult, ServiceStats,
+)
+
+__all__ = [
+    "POLICY_NAMES", "SchedulePolicy", "RoundRobinPolicy",
+    "WeightedQueueDepthPolicy", "DeadlineAwarePolicy", "SchedulerCore",
+    "make_policy",
+]
+
+
+def _depth(pool: ArenaPool) -> int:
+    """A pool's backlog: queued plus in-flight requests."""
+    return len(pool.queue) + pool.load()
+
+
+class SchedulePolicy:
+    """Which pools advance on a tick, in what order, and how many slots
+    each may fill.  Stateless except where noted; one instance serves one
+    SchedulerCore (round-robin keeps a cursor)."""
+
+    name = "base"
+    #: gang=False advances the FIRST pool in `order` that yields work
+    #: (one superstep per tick — the historical frontend cadence);
+    #: gang=True advances EVERY pool with work in one tick, which is what
+    #: the cross-pool fused evaluate batches over.
+    gang = False
+    #: pools admit earliest-deadline-first within a priority class
+    deadline_first = False
+
+    def order(self, core: "SchedulerCore") -> list:
+        """Bucket keys in the order the core should try them this tick."""
+        return list(core._order)
+
+    def admit_limits(self, core: "SchedulerCore") -> dict:
+        """Per-bucket active-slot caps ({} = every pool may fill to G)."""
+        return {}
+
+    def advanced(self, core: "SchedulerCore", key) -> None:
+        """Notification that `key`'s pool advanced this tick."""
+
+
+class RoundRobinPolicy(SchedulePolicy):
+    """One pool per tick, rotating — today's ServiceFrontend behavior."""
+
+    name = "round-robin"
+
+    def __init__(self):
+        self._rr = 0
+
+    def order(self, core):
+        n = len(core._order)
+        return [core._order[(self._rr + i) % n] for i in range(n)]
+
+    def advanced(self, core, key):
+        self._rr = (core._order.index(key) + 1) % len(core._order)
+
+
+class WeightedQueueDepthPolicy(SchedulePolicy):
+    """Gang tick, deepest backlog first, admission caps proportional to
+    queue-depth share (per-bucket G sizing: a bucket with 80% of the
+    backlog may fill 80% of its slots; every bucket keeps at least 1)."""
+
+    name = "weighted-queue-depth"
+    gang = True
+
+    def order(self, core):
+        keys = [k for k in core._order if core.pools[k].has_work()]
+        return sorted(
+            keys, key=lambda k: (-_depth(core.pools[k]),
+                                 core._order.index(k)))
+
+    def admit_limits(self, core):
+        depths = {k: _depth(core.pools[k]) for k in core._order
+                  if core.pools[k].has_work()}
+        total = sum(depths.values())
+        if total == 0:
+            return {}
+        return {k: max(1, min(core.pools[k].G,
+                              math.ceil(core.pools[k].G * d / total)))
+                for k, d in depths.items()}
+
+
+class DeadlineAwarePolicy(SchedulePolicy):
+    """The pool holding the most urgent deadline advances first; its
+    admission prefers earlier deadlines within a priority class.  Pools
+    with no deadlines fall back to backlog order."""
+
+    name = "deadline-aware"
+    deadline_first = True
+
+    def _slack(self, core, key) -> float:
+        pool = core.pools[key]
+        deadlines = [r.deadline_tick for r in pool.queue
+                     if r.deadline_tick is not None]
+        deadlines += [s.req.deadline_tick for s in pool.slots
+                      if s is not None and s.req.deadline_tick is not None]
+        return (min(deadlines) - core.ticks) if deadlines else math.inf
+
+    def order(self, core):
+        keys = [k for k in core._order if core.pools[k].has_work()]
+        return sorted(
+            keys, key=lambda k: (self._slack(core, k),
+                                 -_depth(core.pools[k]),
+                                 core._order.index(k)))
+
+
+POLICY_NAMES = ("round-robin", "weighted-queue-depth", "deadline-aware")
+
+_POLICIES = {
+    "round-robin": RoundRobinPolicy,
+    "weighted-queue-depth": WeightedQueueDepthPolicy,
+    "deadline-aware": DeadlineAwarePolicy,
+}
+
+
+def make_policy(policy: Union[str, SchedulePolicy]) -> SchedulePolicy:
+    if isinstance(policy, SchedulePolicy):
+        return policy
+    if policy not in _POLICIES:
+        raise ValueError(f"unknown schedule policy {policy!r}: one of "
+                         f"{POLICY_NAMES} (or a SchedulePolicy instance)")
+    return _POLICIES[policy]()
+
+
+class SchedulerCore:
+    """Config-bucketed arena pools under one global tick clock.
+
+    The engine room of SearchClient (and, through it, the ServiceFrontend
+    / SearchService compatibility adapters).  Owns the pools dict, the
+    policy, the deadline ledger, cold-pool retirement, and the cross-pool
+    fused Simulation batch.
+    """
+
+    def __init__(
+        self,
+        env: Environment,
+        sim: SimulationBackend,
+        G: int,
+        p: int,
+        executor: str = "faithful",
+        default_cfg: Optional[TreeConfig] = None,
+        policy: Union[str, SchedulePolicy] = "round-robin",
+        fuse_across_pools: Optional[bool] = None,
+        retire_after_ticks: Optional[int] = None,
+        alternating_signs: bool = False,
+        reuse_subtree: bool = True,
+        compact_threshold: float = 0.0,
+        compact_exit_threshold: Optional[float] = None,
+        persistent_compaction: bool = True,
+        expansion: str = "loop",
+    ):
+        self.env, self.sim = env, sim
+        self.G, self.p = G, p
+        self.executor = executor
+        self.default_cfg = default_cfg
+        self.policy = make_policy(policy)
+        # fuse the gang tick's Simulation rows across pools into ONE
+        # evaluate() call; None = whenever the policy gangs.  False keeps
+        # gang ticks but evaluates per pool (the bit-identity control).
+        self.fuse = self.policy.gang if fuse_across_pools is None \
+            else fuse_across_pools
+        self.retire_after_ticks = retire_after_ticks
+        self._pool_kw = dict(
+            alternating_signs=alternating_signs,
+            reuse_subtree=reuse_subtree,
+            compact_threshold=compact_threshold,
+            compact_exit_threshold=compact_exit_threshold,
+            persistent_compaction=persistent_compaction,
+        )
+        # ONE host-expansion engine (and process pool, in "pool" mode)
+        # shared by every bucket
+        self.expander = ExpansionEngine(env, expansion)
+        self.pools: dict = {}
+        self._order: list = []          # bucket keys in creation order
+        self.last_key = None            # bucket of the latest superstep
+        self.ticks = 0                  # monotonic global tick clock
+        # handle surface: per-request results and streamed move events,
+        # fed by the pool listeners (non-draining — readable mid-flight)
+        self.results: dict[int, SearchResult] = {}
+        self.move_log: dict[int, list[MoveEvent]] = {}
+        self._seen_uids: set[int] = set()   # O(1) duplicate-submit guard
+        self._deadlines: list[tuple[int, int, tuple]] = []  # (tick, uid, key)
+        # cross-pool fusion counters (BENCH service_xpool_fuse_* rows)
+        self.xpool_batches = 0          # fused evaluate() calls spanning >1 pool
+        self.xpool_rows_max = 0         # largest fused cross-pool batch
+        self.xpool_pool_rows_max = 0    # largest single-pool share inside one
+
+    # ---- routing ----
+    def _pool_for(self, cfg: TreeConfig) -> ArenaPool:
+        key = bucket_key(cfg)
+        pool = self.pools.get(key)
+        if pool is None:
+            pool = ArenaPool(
+                canonical_config(cfg), self.env, self.sim, self.G, self.p,
+                executor=self.executor, expander=self.expander,
+                **self._pool_kw)
+            pool.clock = lambda: self.ticks
+            pool.move_listener = self._on_move
+            pool.result_listener = self._on_result
+            self.pools[key] = pool
+            self._order.append(key)
+        return pool
+
+    def submit(self, req: SearchRequest) -> tuple:
+        """Route a request to its bucket's pool (created or resurrected on
+        demand); returns (pool, bucket_key)."""
+        cfg = req.cfg if req.cfg is not None else self.default_cfg
+        if cfg is None:
+            raise ValueError(
+                f"request uid={req.uid} carries no TreeConfig and the "
+                f"scheduler has no default_cfg")
+        if req.cfg is None:
+            req.cfg = cfg
+        if req.uid in self._seen_uids:
+            raise ValueError(f"request uid={req.uid} already submitted — "
+                             f"uids are the handle identity and must be "
+                             f"unique per client")
+        self._seen_uids.add(req.uid)
+        key = bucket_key(cfg)
+        pool = self._pool_for(cfg)
+        req.submit_tick = self.ticks
+        if req.deadline_supersteps is not None:
+            req.deadline_tick = self.ticks + int(req.deadline_supersteps)
+            self._deadlines.append((req.deadline_tick, req.uid, key))
+        pool.submit(req)
+        pool.idle_ticks = 0
+        return pool, key
+
+    # ---- listener plumbing (the handle surface) ----
+    def _on_move(self, ev: MoveEvent):
+        self.move_log.setdefault(ev.uid, []).append(ev)
+
+    def _on_result(self, res: SearchResult):
+        self.results[res.uid] = res
+
+    def cancel(self, uid: int, key=None, reason: str = "cancel") -> bool:
+        """Evict a queued or in-flight request; False once it completed
+        (results are immutable after eviction)."""
+        if uid in self.results:
+            return False
+        pools = [self.pools[key]] if key in self.pools else \
+            list(self.pools.values())
+        return any(pool.cancel(uid, reason) for pool in pools)
+
+    def _expire_deadlines(self):
+        if not self._deadlines:
+            return
+        due = [d for d in self._deadlines if d[0] <= self.ticks]
+        if not due:
+            return
+        self._deadlines = [d for d in self._deadlines if d[0] > self.ticks]
+        for _, uid, key in due:
+            self.cancel(uid, key, reason="deadline")
+
+    # ---- the global tick ----
+    def tick(self) -> bool:
+        """One scheduler tick: expire deadlines, apply the policy's
+        admission caps, advance the policy's pool choice (one pool, or a
+        fused gang), then sweep idle pools toward retirement.  False when
+        no pool had work."""
+        self.ticks += 1
+        self._expire_deadlines()
+        limits = self.policy.admit_limits(self)
+        for key, pool in self.pools.items():
+            pool.admit_limit = limits.get(key)
+            pool.deadline_first = self.policy.deadline_first
+        pending = []
+        for key in self.policy.order(self):
+            pool = self.pools[key]
+            if pool.retired or not pool.has_work():
+                continue
+            pend = pool.begin_superstep()
+            if pend is None:
+                continue
+            pending.append((pool, pend))
+            self.last_key = key
+            self.policy.advanced(self, key)
+            if not self.policy.gang:
+                break
+        if pending:
+            self._evaluate_and_finish(pending)
+        self._sweep_retirement(advanced={id(pool) for pool, _ in pending})
+        return bool(pending)
+
+    def _evaluate_and_finish(self, pending):
+        """ONE SimulationBackend.evaluate spanning every advancing pool
+        (sim-state shapes are config-independent), results scattered back
+        per pool — or per-pool evaluate when fusion is off / trivial."""
+        if self.fuse and len(pending) > 1:
+            rows = [len(pend.sim_states) for _, pend in pending]
+            fused = np.concatenate(
+                [pend.sim_states for _, pend in pending])
+            t0 = time.perf_counter()
+            values, priors = self.sim.evaluate(fused)
+            t_sim = time.perf_counter() - t0
+            self.xpool_batches += 1
+            self.xpool_rows_max = max(self.xpool_rows_max, len(fused))
+            self.xpool_pool_rows_max = max(self.xpool_pool_rows_max,
+                                           max(rows))
+            off = 0
+            for (pool, pend), r in zip(pending, rows):
+                pr = None if priors is None else priors[off:off + r]
+                pool.finish_superstep(
+                    pend, values[off:off + r], pr,
+                    t_sim=t_sim * r / max(len(fused), 1), own_batch=False)
+                off += r
+        else:
+            for pool, pend in pending:
+                t0 = time.perf_counter()
+                values, priors = self.sim.evaluate(pend.sim_states)
+                t_sim = time.perf_counter() - t0
+                pool.finish_superstep(pend, values, priors, t_sim=t_sim)
+
+    def _sweep_retirement(self, advanced: set):
+        ttl = self.retire_after_ticks
+        for pool in self.pools.values():
+            if id(pool) in advanced or pool.has_work():
+                pool.idle_ticks = 0
+            elif not pool.retired:
+                pool.idle_ticks += 1
+                if ttl is not None and pool.idle_ticks >= ttl:
+                    pool.retire()
+
+    def run(self, max_ticks: int = 100_000) -> list[SearchResult]:
+        """Drain every pool (compatibility surface for the adapters; new
+        code drives poll/run_until on the client)."""
+        steps = 0
+        while steps < max_ticks and self.tick():
+            steps += 1
+        return self.completed
+
+    # ---- aggregate views ----
+    @property
+    def completed(self) -> list[SearchResult]:
+        done: list[SearchResult] = []
+        for key in self._order:
+            done.extend(self.pools[key].completed)
+        return done
+
+    @property
+    def stats(self) -> ServiceStats:
+        """Scheduler-wide aggregate of every pool's counters.  `ticks` is
+        the core's own monotonic clock (NOT the sum of per-pool attempt
+        counters — the per-tick information merge() used to lose), and
+        `sim_batches` adds the cross-pool fused evaluate calls the core
+        issued itself."""
+        total = ServiceStats()
+        for pool in self.pools.values():
+            total = total.merge(pool.stats)
+        total.ticks = self.ticks
+        total.sim_batches += self.xpool_batches
+        total.max_fused_rows = max(total.max_fused_rows, self.xpool_rows_max)
+        return total
+
+    def pool_summaries(self) -> list[dict]:
+        """Per-bucket one-liners: shape class, load, session counters."""
+        out = []
+        for key in self._order:
+            pool = self.pools[key]
+            s = pool.stats
+            out.append({
+                "bucket": key, "cfg": pool.cfg, "G": pool.G,
+                "queued": len(pool.queue),
+                "active": pool.load(),
+                "retired": pool.retired,
+                "idle_ticks": pool.idle_ticks,
+                "supersteps": s.supersteps, "completed": s.completed,
+                "session_gathers": s.session_gathers,
+                "session_scatters": s.session_scatters,
+                "session_reuses": s.session_reuses,
+            })
+        return out
+
+    def close(self):
+        for pool in self.pools.values():
+            pool.close()          # flushes sessions; engine is shared
+        self.expander.close()     # ... so the core closes it once

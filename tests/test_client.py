@@ -1,0 +1,459 @@
+"""SearchClient handle API + global scheduler core.
+
+Claim groups:
+
+  * handle lifecycle — submit returns an opaque handle; cancel works
+    before admission, mid-flight (committed moves survive) and is a
+    no-op after completion; deadline budgets evict queued and in-flight
+    requests; streamed moves() is bit-identical to the terminal trace;
+  * scheduling — priorities reorder admission, every policy returns
+    bit-identical per-request results (policies move WHEN work happens,
+    never WHAT it computes), the weighted-queue-depth gang tick fuses
+    one evaluate() batch across pools strictly larger than any single
+    pool's, and fused vs per-pool evaluation is bit-identical;
+  * retirement — idle pools release their arena after the TTL and are
+    resurrected on demand, preserving every per-request result;
+  * stats / deprecation — the monotonic ticks clock and admission-wait
+    histogram survive aggregation; the legacy surfaces warn once.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import TreeConfig
+from repro.core.tree import bucket_key
+from repro.envs import BanditTreeEnv, BanditValueBackend
+from repro.service import (
+    POLICY_NAMES, MoveEvent, SearchClient, SearchRequest, SearchService,
+    ServiceFrontend,
+)
+
+ENV = BanditTreeEnv(fanout=3, terminal_depth=12)
+P = 4
+
+CFG_A = TreeConfig(X=96, F=3, D=5)
+CFG_B = TreeConfig(X=64, F=3, D=4)
+CFG_C = TreeConfig(X=48, F=3, D=6)
+MIX = [CFG_A, CFG_B, CFG_C, CFG_A, CFG_B, CFG_C]
+
+
+def _client(**kw):
+    kw.setdefault("G", 2)
+    kw.setdefault("p", P)
+    kw.setdefault("default_cfg", CFG_A)
+    return SearchClient(ENV, BanditValueBackend(), **kw)
+
+
+def _assert_result_equal(got, want, label):
+    assert got.actions == want.actions, label
+    assert got.rewards == want.rewards, label
+    assert got.supersteps == want.supersteps, label
+    for va, vb in zip(got.visit_counts, want.visit_counts):
+        np.testing.assert_array_equal(va, vb, err_msg=label)
+
+
+# ---------------------------------------------------------------------------
+# handle lifecycle
+# ---------------------------------------------------------------------------
+
+def test_submit_returns_handle_not_pool():
+    cl = _client()
+    h = cl.submit(SearchRequest(uid=0, seed=0, budget=2))
+    assert not h.done()
+    assert h.status() == "queued"
+    res = h.result()                      # polls to completion
+    assert h.done() and h.status() == "done"
+    assert res.uid == 0 and res.actions and not res.cancelled
+    assert "uid=0" in repr(h)
+    cl.close()
+
+
+def test_poll_budget_and_run_until():
+    cl = _client()
+    h = cl.submit(SearchRequest(uid=0, seed=1, budget=4))
+    assert cl.poll(0) == 0                # no budget, no work done
+    assert cl.poll(1) == 1                # one tick
+    assert not h.done()
+    assert cl.run_until(lambda c: h.done())
+    assert cl.poll(5) == 0                # drained
+    assert cl.run_until(lambda c: False, max_ticks=3) is False
+    cl.close()
+
+
+def test_handle_lookup_and_duplicate_uid_rejected():
+    cl = _client()
+    h = cl.submit(SearchRequest(uid=7, seed=0, budget=2))
+    assert cl.handle(7) is h
+    with pytest.raises(ValueError, match="already submitted"):
+        cl.submit(SearchRequest(uid=7, seed=1, budget=2))
+    h.result()
+    with pytest.raises(ValueError, match="already submitted"):
+        cl.submit(SearchRequest(uid=7, seed=1, budget=2))
+    cl.close()
+
+
+def test_cancel_before_admission():
+    cl = _client(G=1)
+    h0 = cl.submit(SearchRequest(uid=0, seed=0, budget=4))
+    h1 = cl.submit(SearchRequest(uid=1, seed=1, budget=4))
+    cl.poll(1)                            # uid=0 occupies the only slot
+    assert h0.status() == "active" and h1.status() == "queued"
+    assert h1.cancel() is True
+    assert h1.status() == "cancelled" and h1.done()
+    res = h1.result(wait=False)
+    assert res.cancelled and not res.deadline_evicted
+    assert res.actions == [] and res.supersteps == 0
+    assert h1.cancel() is False           # already terminal
+    assert h0.result().actions            # unaffected neighbour
+    assert cl.stats.cancelled == 1
+    cl.close()
+
+
+def test_cancel_mid_flight_keeps_committed_moves():
+    cl = _client(G=1)
+    h = cl.submit(SearchRequest(uid=0, seed=2, budget=2, moves=4))
+    cl.run_until(lambda c: len(c.core.move_log.get(0, [])) >= 2)
+    assert h.status() == "active"
+    assert h.cancel() is True
+    res = h.result(wait=False)
+    assert res.cancelled and len(res.actions) >= 2
+    assert len(res.actions) < 4           # it really was cut short
+    assert cl.core.pools[bucket_key(CFG_A)].load() == 0   # slot freed
+    assert cl.poll(3) == 0                # nothing left to schedule
+    cl.close()
+
+
+def test_cancel_after_completion_is_noop():
+    cl = _client()
+    h = cl.submit(SearchRequest(uid=0, seed=3, budget=2))
+    res = h.result()
+    assert h.cancel() is False
+    assert h.result(wait=False) is res and not res.cancelled
+    cl.close()
+
+
+def test_deadline_evicts_queued_request():
+    cl = _client(G=1)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=8))
+    h1 = cl.submit(SearchRequest(uid=1, seed=1, budget=2),
+                   deadline_supersteps=3)
+    cl.run_until(lambda c: h1.done())
+    assert h1.status() == "evicted"
+    res = h1.result(wait=False)
+    assert res.cancelled and res.deadline_evicted and res.actions == []
+    assert cl.stats.deadline_evictions == 1
+    cl.close()
+
+
+def test_deadline_evicts_in_flight_request_keeping_moves():
+    cl = _client(G=1)
+    h = cl.submit(SearchRequest(uid=0, seed=4, budget=2, moves=8),
+                  deadline_supersteps=5)
+    cl.run_until(lambda c: h.done())
+    res = h.result(wait=False)
+    assert h.status() == "evicted" and res.deadline_evicted
+    assert 1 <= len(res.actions) < 8      # partial progress survived
+    cl.close()
+
+
+def test_generous_deadline_never_fires():
+    cl = _client()
+    h = cl.submit(SearchRequest(uid=0, seed=5, budget=2),
+                  deadline_supersteps=10_000)
+    res = h.result()
+    assert h.status() == "done" and not res.cancelled
+    assert cl.stats.deadline_evictions == 0
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# streamed moves()
+# ---------------------------------------------------------------------------
+
+def test_moves_stream_bit_identical_to_terminal_trace():
+    """Acceptance: the per-move events streamed as reroots commit carry
+    exactly the terminal result's action / reward / visit-distribution
+    trace, in order, with `last` marking the final move."""
+    cl = _client()
+    h = cl.submit(SearchRequest(uid=0, seed=6, budget=3, moves=3))
+    events = list(h.moves())              # iterating IS serving
+    assert h.done()
+    res = h.result(wait=False)
+    assert [e.action for e in events] == res.actions
+    assert [e.reward for e in events] == res.rewards
+    assert [e.move_index for e in events] == list(range(len(res.actions)))
+    for ev, vc in zip(events, res.visit_counts):
+        assert isinstance(ev, MoveEvent)
+        np.testing.assert_array_equal(ev.visit_counts, vc)
+    assert [e.last for e in events] == [False, False, True]
+    cl.close()
+
+
+def test_moves_stream_interleaves_with_other_requests():
+    """Events stream per handle even when several requests share the
+    scheduler; a second pass over moves() replays from the buffer."""
+    cl = _client()
+    hs = [cl.submit(SearchRequest(uid=i, seed=10 + i, budget=2, moves=2))
+          for i in range(3)]
+    traces = {h.uid: [e.action for e in h.moves()] for h in hs}
+    for h in hs:
+        assert traces[h.uid] == h.result(wait=False).actions
+        assert [e.action for e in h.moves()] == traces[h.uid]   # replay
+    cl.close()
+
+
+def test_moves_stream_ends_on_cancel():
+    cl = _client(G=1)
+    h = cl.submit(SearchRequest(uid=0, seed=2, budget=2, moves=6))
+    it = h.moves()
+    first = next(it)
+    assert first.move_index == 0 and not first.last
+    h.cancel()
+    rest = list(it)                       # stream ends, no hang
+    assert [e.move_index for e in rest] == \
+        list(range(1, len(h.result(wait=False).actions)))
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# scheduling: priorities + policies + cross-pool fusion
+# ---------------------------------------------------------------------------
+
+def test_priority_reorders_admission():
+    cl = _client(G=1)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=2))
+    cl.poll(1)                                             # uid=0 occupies
+    cl.submit(SearchRequest(uid=1, seed=1, budget=2))      # default class
+    cl.submit(SearchRequest(uid=2, seed=2, budget=2), priority=5)
+    done = [r.uid for r in cl.drain()]
+    assert done == [0, 2, 1]              # priority 5 jumps the queue
+    cl.close()
+
+
+def _mix_requests():
+    return [SearchRequest(uid=i, seed=20 + i, budget=3, moves=1 + i % 2,
+                          cfg=cfg)
+            for i, cfg in enumerate(MIX)]
+
+
+def _dedicated_results():
+    out = {}
+    for req in _mix_requests():
+        svc = SearchService(req.cfg, ENV, BanditValueBackend(), G=1, p=P)
+        try:
+            svc.submit(SearchRequest(uid=req.uid, seed=req.seed,
+                                     budget=req.budget, moves=req.moves))
+            (out[req.uid],) = svc.run()
+        finally:
+            svc.close()
+    return out
+
+
+def test_every_policy_matches_dedicated_services():
+    """Policies move WHEN work happens, never WHAT it computes: the same
+    heterogeneous mix under every policy equals dedicated single-config
+    runs of each request, bit for bit."""
+    want = _dedicated_results()
+    for policy in POLICY_NAMES:
+        cl = _client(G=2, policy=policy)
+        try:
+            handles = [cl.submit(req) for req in _mix_requests()]
+            for h in handles:
+                _assert_result_equal(h.result(), want[h.uid],
+                                     f"{policy} uid={h.uid}")
+        finally:
+            cl.close()
+
+
+def test_weighted_policy_fuses_across_pools():
+    """The gang tick really fuses: one evaluate() spans >1 pool, and the
+    fused batch is strictly larger than its largest single-pool share."""
+    cl = _client(G=2, policy="weighted-queue-depth")
+    for req in _mix_requests():
+        cl.submit(req)
+    cl.drain()
+    core = cl.core
+    assert core.xpool_batches > 0
+    assert core.xpool_rows_max > core.xpool_pool_rows_max > 0
+    # the aggregate view surfaces the fused batches too
+    assert cl.stats.max_fused_rows == core.xpool_rows_max
+    cl.close()
+
+
+def test_fused_vs_per_pool_evaluate_bit_identical():
+    """Acceptance: switching the gang tick between ONE cross-pool fused
+    evaluate and per-pool evaluate changes nothing per request."""
+    def go(fuse):
+        cl = _client(G=2, policy="weighted-queue-depth",
+                     fuse_across_pools=fuse)
+        try:
+            hs = [cl.submit(req) for req in _mix_requests()]
+            return {h.uid: h.result() for h in hs}, cl.core.xpool_batches
+        finally:
+            cl.close()
+
+    fused, nb_fused = go(True)
+    split, nb_split = go(False)
+    assert nb_fused > 0 and nb_split == 0
+    for uid in fused:
+        _assert_result_equal(fused[uid], split[uid], f"uid={uid}")
+
+
+def test_weighted_policy_sizes_buckets_by_queue_depth():
+    """Per-bucket G sizing: a bucket holding most of the backlog may fill
+    its slots; a one-request bucket is capped to its fair share (>= 1)."""
+    cl = _client(G=4, policy="weighted-queue-depth")
+    for i in range(8):
+        cl.submit(SearchRequest(uid=i, seed=i, budget=3, cfg=CFG_A))
+    cl.submit(SearchRequest(uid=8, seed=8, budget=3, cfg=CFG_B))
+    cl.poll(1)
+    a = cl.core.pools[bucket_key(CFG_A)]
+    b = cl.core.pools[bucket_key(CFG_B)]
+    assert a.load() > b.load() >= 1       # depth-weighted, nobody starves
+    assert b.admit_limit < a.admit_limit <= a.G
+    assert len(cl.drain()) == 9           # sizing never loses a request
+    cl.close()
+
+
+def test_deadline_aware_policy_prefers_urgent_bucket():
+    """The pool holding the nearest deadline advances first on every
+    tick, so an urgent request on a cold bucket overtakes a deep default
+    bucket."""
+    cl = _client(G=1, policy="deadline-aware")
+    for i in range(4):
+        cl.submit(SearchRequest(uid=i, seed=i, budget=4, cfg=CFG_A))
+    h = cl.submit(SearchRequest(uid=9, seed=9, budget=4, cfg=CFG_B),
+                  deadline_supersteps=40)
+    cl.drain()
+    assert h.status() == "done"           # made its deadline
+    by_finish = sorted(cl.core.completed, key=lambda r: r.done_at)
+    assert by_finish[0].uid == 9          # urgent bucket went first
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# cold-pool retirement
+# ---------------------------------------------------------------------------
+
+def test_idle_pool_retires_and_resurrects_preserving_results():
+    """Acceptance: an idle bucket releases its arena after the TTL
+    (executor freed, session closed), keeps every completed result, and
+    is resurrected on the next submit with bit-identical behavior."""
+    cl = _client(G=2, retire_after_ticks=3)
+    hb = cl.submit(SearchRequest(uid=0, seed=0, budget=2, cfg=CFG_B))
+    cl.submit(SearchRequest(uid=1, seed=1, budget=40, cfg=CFG_A))
+    key_b = bucket_key(CFG_B)
+    cl.run_until(lambda c: c.core.pools[key_b].retired)
+    pool_b = cl.core.pools[key_b]
+    assert pool_b.exec is None and pool_b.sts is None
+    assert cl.stats.retirements == 1
+    assert hb.result(wait=False).actions            # result survived
+    # resurrect on demand: same bucket, fresh arena, same computation
+    hb2 = cl.submit(SearchRequest(uid=2, seed=0, budget=2, cfg=CFG_B))
+    assert pool_b.retired is False and pool_b.exec is not None
+    res2 = hb2.result()
+    _assert_result_equal(res2, hb.result(wait=False), "resurrected run")
+    assert cl.handle(0).status() == "done"          # old handle intact
+    cl.close()
+
+
+def test_busy_pool_never_retires():
+    cl = _client(G=2, retire_after_ticks=1)
+    h = cl.submit(SearchRequest(uid=0, seed=0, budget=6, moves=2))
+    h.result()
+    # the pool idles only after its work drained; no ticks follow, so it
+    # stays live (retirement needs the scheduler to keep ticking)
+    assert not cl.core.pools[bucket_key(CFG_A)].retired
+    assert cl.stats.retirements == 0
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# stats: monotonic ticks + wait histogram
+# ---------------------------------------------------------------------------
+
+def test_ticks_clock_and_wait_histogram():
+    cl = _client(G=1)
+    for i in range(3):
+        cl.submit(SearchRequest(uid=i, seed=i, budget=2))
+    cl.drain()
+    s = cl.stats
+    assert s.ticks == cl.core.ticks > 0   # the core's clock, not a sum
+    assert sum(s.wait_supersteps.values()) == s.admitted == 3
+    # G=1 serializes: the 2nd and 3rd request measurably waited
+    assert max(s.wait_supersteps) > 0
+    assert s.wait_percentile(0) <= s.wait_percentile(50) \
+        <= s.wait_percentile(95) == max(s.wait_supersteps)
+    cl.close()
+
+
+def test_wait_histogram_merges_across_pools():
+    from repro.service import ServiceStats
+    a = ServiceStats(wait_supersteps={0: 2, 3: 1})
+    b = ServiceStats(wait_supersteps={3: 2, 5: 1})
+    m = a.merge(b)
+    assert m.wait_supersteps == {0: 2, 3: 3, 5: 1}
+    assert ServiceStats().wait_percentile(95) == 0
+
+
+def test_pool_load_is_public_and_summaries_use_it():
+    cl = _client(G=2)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=4))
+    cl.poll(1)
+    pool = cl.core.pools[bucket_key(CFG_A)]
+    assert pool.load() == 1
+    (summary,) = cl.pool_summaries()
+    assert summary["active"] == 1 and summary["retired"] is False
+    cl.drain()
+    assert pool.load() == 0
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# deprecation surface
+# ---------------------------------------------------------------------------
+
+def test_search_service_warns_once_pointing_at_client():
+    SearchService._warned = False
+    with pytest.warns(DeprecationWarning, match="SearchClient"):
+        svc = SearchService(CFG_A, ENV, BanditValueBackend(), G=1, p=P)
+    svc.close()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")    # second construction is silent
+        SearchService(CFG_A, ENV, BanditValueBackend(), G=1, p=P).close()
+
+
+def test_arena_shim_warns_once_on_legacy_import():
+    import repro.service.arena as arena
+    arena._warned = False
+    with pytest.warns(DeprecationWarning, match="core.executor"):
+        make = arena.make_arena_executor
+    ex = make(CFG_A, 1, "reference")
+    assert ex.G == 1
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert arena.JaxArenaExecutor is not None   # silent after first
+    with pytest.raises(AttributeError):
+        arena.not_a_name
+
+
+def test_init_exports_new_names_first():
+    import repro.service as service
+    exported = service.__all__
+    assert exported.index("SearchClient") == 0
+    assert exported.index("SearchClient") < exported.index("ServiceFrontend")
+    assert exported.index("SchedulerCore") < exported.index("SearchService")
+
+
+def test_frontend_is_adapter_over_client():
+    fe = ServiceFrontend(ENV, BanditValueBackend(), G=2, p=P,
+                         default_cfg=CFG_A)
+    assert isinstance(fe.client, SearchClient)
+    pool = fe.submit(SearchRequest(uid=0, seed=0, budget=2))
+    assert pool is fe.pools[bucket_key(CFG_A)]
+    (res,) = fe.run()
+    assert res.uid == 0
+    assert fe.stats.ticks == fe.core.ticks
+    fe.close()

@@ -24,6 +24,14 @@ through ServiceFrontend (config-carrying requests, persistent compaction
 sessions) must equal each executor's direct SearchService run — the
 frontend/pool split and session write-back deferral are pure
 re-layerings, never semantic changes.
+
+So does the SearchClient redesign: the same schedule through the handle
+API (round-robin policy — the historical cadence) must round-trip bit-
+identically on every executor, and the cross-pool fused evaluate path
+(weighted-queue-depth gang ticks batching a >= 3-config mix into ONE
+SimulationBackend.evaluate per tick) must equal dedicated single-config
+runs per request while its fused batches strictly exceed any single
+pool's share.
 """
 
 import numpy as np
@@ -32,7 +40,9 @@ import pytest
 from repro.core import TreeConfig
 from repro.core.executor import EXECUTOR_NAMES
 from repro.envs import BanditTreeEnv, BanditValueBackend
-from repro.service import SearchRequest, SearchService, ServiceFrontend
+from repro.service import (
+    SearchClient, SearchRequest, SearchService, ServiceFrontend,
+)
 
 CFG = TreeConfig(X=160, F=4, D=6)
 ENV = BanditTreeEnv(fanout=4, terminal_depth=10)
@@ -156,6 +166,73 @@ def test_frontend_path_matches_direct_service(executor):
     assert stats.session_reuses > 0
     _assert_identical((done, stats.supersteps), _run(executor, 0.0, "loop"),
                       f"frontend/{executor}")
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+def test_client_round_trip_matches_direct_service(executor):
+    """Acceptance: the SearchClient handle API (round-robin policy) is a
+    pure re-surfacing — the matrix schedule submitted through handles and
+    drained with result() equals the executor's own direct SearchService
+    masked/loop run, superstep counts included."""
+    cl = SearchClient(ENV, BanditValueBackend(), G=G, p=P,
+                      executor=executor, default_cfg=CFG,
+                      compact_threshold=0.7, persistent_compaction=True)
+    try:
+        handles = [cl.submit(SearchRequest(cfg=CFG, **kw))
+                   for kw in _SCHEDULE]
+        done = {h.uid: h.result() for h in handles}
+        stats = cl.stats
+    finally:
+        cl.close()
+    assert all(h.status() == "done" for h in handles)
+    # the compacted drain tail still runs through persistent sessions
+    assert stats.compacted_supersteps > 0
+    assert stats.session_gathers < stats.compacted_supersteps
+    _assert_identical((done, stats.supersteps), _run(executor, 0.0, "loop"),
+                      f"client/{executor}")
+
+
+# three shape classes for the cross-pool fusion acceptance: same fanout
+# (the env fixes F), different arena/depth classes
+XPOOL_CFGS = (CFG, TreeConfig(X=128, F=4, D=5), TreeConfig(X=96, F=4, D=4))
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+def test_client_xpool_fused_matches_dedicated_services(executor):
+    """Acceptance: cross-pool fused evaluate (ONE SimulationBackend
+    .evaluate spanning every advancing pool of a 3-config heterogeneous
+    mix) is bit-identical per request to dedicated single-config runs,
+    and the fused batch strictly exceeds the largest single-pool share."""
+    reqs = [dict(uid=i, seed=50 + i, budget=3, moves=1 + i % 2,
+                 keep_tree=True) for i in range(6)]
+    cl = SearchClient(ENV, BanditValueBackend(), G=2, p=P,
+                      executor=executor, policy="weighted-queue-depth")
+    try:
+        handles = [cl.submit(SearchRequest(cfg=XPOOL_CFGS[i % 3], **kw))
+                   for i, kw in enumerate(reqs)]
+        done = {h.uid: h.result() for h in handles}
+        assert cl.core.xpool_batches > 0
+        assert cl.core.xpool_rows_max > cl.core.xpool_pool_rows_max > 0
+    finally:
+        cl.close()
+    for i, kw in enumerate(reqs):
+        svc = SearchService(XPOOL_CFGS[i % 3], ENV, BanditValueBackend(),
+                            G=1, p=P, executor=executor)
+        try:
+            svc.submit(SearchRequest(**kw))
+            (want,) = svc.run()
+        finally:
+            svc.close()
+        got, label = done[kw["uid"]], f"xpool/{executor} uid={kw['uid']}"
+        assert got.actions == want.actions, label
+        assert got.rewards == want.rewards, label
+        assert got.supersteps == want.supersteps, label
+        for va, vb in zip(got.visit_counts, want.visit_counts):
+            np.testing.assert_array_equal(va, vb, err_msg=label)
+        for k in want.tree_snapshot:
+            np.testing.assert_array_equal(
+                got.tree_snapshot[k], want.tree_snapshot[k],
+                err_msg=f"{label} field={k}")
 
 
 def test_pool_expansion_matches_oracle():
