@@ -31,12 +31,25 @@ arena is freed; watch the pool summary) and resurrect on demand.
 
 --frontend keeps the pre-handle ServiceFrontend adapter path.
 
+Observability (client mode): --trace-out records every superstep phase
+(select / expand / simulate / backup / compact-gather / compact-scatter)
+and request lifecycle (submit -> admit -> move commits -> result /
+cancel / evict) on per-pool timelines and writes Chrome-trace JSON;
+--metrics prints the Prometheus text snapshot (queue depths, smoothed
+load, admission waits, fused-batch sizes, evictions, expirations).
+
+To view a trace: open https://ui.perfetto.dev in a browser, click
+"Open trace file" and pick trace.json (chrome://tracing also works).
+Tracks are one per arena pool plus the scheduler; zoom into any
+"superstep" span to see the select/expand/simulate/backup phase split —
+the Fig. 8-style breakdown the paper's CPU/FPGA numbers rest on.
+
   PYTHONPATH=src python examples/service_demo.py
   PYTHONPATH=src python examples/service_demo.py --executor pallas
   PYTHONPATH=src python examples/service_demo.py --frontend
   PYTHONPATH=src python examples/service_demo.py --client
   PYTHONPATH=src python examples/service_demo.py --client \
-      --policy weighted-queue-depth
+      --policy weighted-queue-depth --trace-out trace.json --metrics
 """
 
 import argparse
@@ -64,6 +77,7 @@ def run_client(args):
         executor=args.executor, expansion=args.expansion,
         policy=args.policy, retire_after_ticks=args.retire_after,
         compact_threshold=0.5, compact_exit_threshold=0.75,
+        trace=bool(args.trace_out), metrics=args.metrics,
     )
     handles = [client.submit(SearchRequest(
         uid=i, seed=i, budget=6 + 2 * (i % 4), moves=1 if i % 3 else 3,
@@ -116,6 +130,14 @@ def run_client(args):
           f"cross-pool fused batches: {client.core.xpool_batches} "
           f"(max {client.core.xpool_rows_max} rows vs best single-pool "
           f"{client.core.xpool_pool_rows_max})")
+    if args.metrics:
+        print("\nPrometheus snapshot:\n" + client.metrics())
+    if args.trace_out:
+        trace = client.trace_export(args.trace_out)
+        print(f"\nwrote {len(trace['traceEvents'])} trace events to "
+              f"{args.trace_out} ({client.tracer.dropped} dropped) — open "
+              f"it at https://ui.perfetto.dev (Open trace file) or "
+              f"chrome://tracing")
     client.close()
 
 
@@ -176,6 +198,13 @@ def main():
     ap.add_argument("--retire-after", type=int, default=12, metavar="TICKS",
                     help="client mode: idle ticks before a cold pool "
                          "releases its arena (resurrected on demand)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="client mode: record phase + request-lifecycle "
+                         "spans and write Chrome-trace JSON here (open at "
+                         "ui.perfetto.dev)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="client mode: print the Prometheus exposition "
+                         "snapshot of the scheduler/pool telemetry")
     ap.add_argument("--client", action="store_true",
                     help="serve through the SearchClient handle API: "
                          "streamed moves(), priorities, deadlines, "

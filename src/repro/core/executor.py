@@ -61,6 +61,7 @@ from repro.core.tree import (
     NULL, TreeConfig, UCTree, arena_set_slot, arena_slot, init_arena,
     init_tree, to_jax,
 )
+from repro.obs.trace import NULL_TRACER
 
 EXECUTOR_NAMES = ("reference", "faithful", "relaxed", "wavefront", "pallas")
 
@@ -94,7 +95,8 @@ class InTreeExecutor(Protocol):
     def release(self) -> None: ...
     def gather_sub(self, slot_idx: np.ndarray, Gc: int) -> "InTreeExecutor": ...
     def scatter_sub(self, sub: "InTreeExecutor", slot_idx: np.ndarray) -> None: ...
-    def open_session(self, slot_idx: np.ndarray, Gc: int) -> "CompactionSession": ...
+    def open_session(self, slot_idx: np.ndarray, Gc: int,
+                     tracer=None, tid: int = 0) -> "CompactionSession": ...
     # single-tree compat surface (the G=1 client's `tree` property and
     # snapshot/action helpers used throughout tests and examples)
     def init(self, root_num_actions: int): ...
@@ -129,11 +131,21 @@ class CompactionSession:
     """
 
     def __init__(self, parent: "InTreeExecutor", slot_idx: np.ndarray,
-                 Gc: int):
+                 Gc: int, tracer=None, tid: int = 0):
         self.parent = parent
         self.slot_idx = np.asarray(slot_idx, np.int32).copy()
         self.Gc = int(Gc)
-        self.sub = parent.gather_sub(self.slot_idx, self.Gc)
+        # obs: gather/scatter spans on the owning pool's trace track.
+        # When tracing is live the gather/scatter are fenced with
+        # block_until_ready so the copy cost is attributed to the span
+        # instead of leaking into whichever phase next touches the arena.
+        self.trace = NULL_TRACER if tracer is None else tracer
+        self.tid = tid
+        with self.trace.span("compact-gather", cat="compact", tid=tid,
+                             slots=len(self.slot_idx), Gc=self.Gc):
+            self.sub = parent.gather_sub(self.slot_idx, self.Gc)
+            if self.trace.enabled:
+                self.sub.block()
         self.dirty = False
         self.open = True
         self.supersteps = 0
@@ -158,7 +170,11 @@ class CompactionSession:
     def sync(self) -> bool:
         """Scatter pending sub-arena updates back; True if one happened."""
         if self.dirty:
-            self.parent.scatter_sub(self.sub, self.slot_idx)
+            with self.trace.span("compact-scatter", cat="compact",
+                                 tid=self.tid, slots=len(self.slot_idx)):
+                self.parent.scatter_sub(self.sub, self.slot_idx)
+                if self.trace.enabled:
+                    self.parent.block()
             self.dirty = False
             return True
         return False
@@ -274,8 +290,9 @@ class JaxExecutor:
         self.trees = jax.tree.map(
             lambda full, s: full.at[idx].set(s[:a]), self.trees, sub.trees)
 
-    def open_session(self, slot_idx: np.ndarray, Gc: int) -> CompactionSession:
-        return CompactionSession(self, slot_idx, Gc)
+    def open_session(self, slot_idx: np.ndarray, Gc: int,
+                     tracer=None, tid: int = 0) -> CompactionSession:
+        return CompactionSession(self, slot_idx, Gc, tracer=tracer, tid=tid)
 
     # -- single-tree compat surface (G=1 driver / tests) ---------------
     def init(self, root_num_actions: int) -> UCTree:
@@ -431,8 +448,9 @@ class ReferenceExecutor:
         for i, g in enumerate(np.asarray(slot_idx)):
             self.trees[g] = sub.trees[i]
 
-    def open_session(self, slot_idx: np.ndarray, Gc: int) -> CompactionSession:
-        return CompactionSession(self, slot_idx, Gc)
+    def open_session(self, slot_idx: np.ndarray, Gc: int,
+                     tracer=None, tid: int = 0) -> CompactionSession:
+        return CompactionSession(self, slot_idx, Gc, tracer=tracer, tid=tid)
 
     # -- single-tree compat surface ------------------------------------
     def init(self, root_num_actions: int):

@@ -42,6 +42,8 @@ from repro.core import fixedpoint as fx
 from repro.core.state_table import StateTable
 from repro.core.tree import NULL
 from repro.envs.vector import PoolVectorEnv, has_fused_step, has_vector_env
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 
 EXPANSION_MODES = ("loop", "vector", "pool", "auto")
 
@@ -146,7 +148,8 @@ class ExpansionEngine:
     and [p, Fp] inserted-id block — and returns ``{g: HostExpansion}``.
     """
 
-    def __init__(self, env, mode: str = "loop", pool_workers: int = 2):
+    def __init__(self, env, mode: str = "loop", pool_workers: int = 2,
+                 tracer=None, metrics=None):
         if mode not in EXPANSION_MODES:
             raise ValueError(f"expansion mode {mode!r}: one of "
                              f"{EXPANSION_MODES}")
@@ -160,12 +163,33 @@ class ExpansionEngine:
         self.env, self.mode = env, mode
         self._venv = (PoolVectorEnv(env, pool_workers) if mode == "pool"
                       else env)
+        self.trace = NULL_TRACER if tracer is None else tracer
+        reg = NULL_REGISTRY if metrics is None else metrics
+        self._m_calls = reg.counter(
+            "service_expand_batch_calls_total",
+            "env batch round-trips issued by the expansion engine",
+            mode=mode)
+        self._m_rows = reg.counter(
+            "service_expand_rows_total",
+            "nodes expanded (env transitions) by the expansion engine",
+            mode=mode)
 
-    def expand(self, slots) -> dict:
-        if self.mode == "loop":
-            return {g: host_expand_phase(self.env, st, sel, nn)
-                    for g, st, sel, nn in slots}
-        return self._expand_batched(list(slots))
+    def expand(self, slots, tid: int = 0) -> dict:
+        with self.trace.span("expand", cat="phase", tid=tid,
+                             slots=len(slots) if hasattr(slots, "__len__")
+                             else -1, mode=self.mode):
+            if self.mode == "loop":
+                out = {g: host_expand_phase(self.env, st, sel, nn)
+                       for g, st, sel, nn in slots}
+                rows = sum(len(hx.fin_nodes) for hx in out.values())
+                # loop mode: one scalar env.step per row
+                self._m_calls.inc(rows)
+            else:
+                out = self._expand_batched(list(slots))
+                rows = sum(len(hx.fin_nodes) for hx in out.values())
+                self._m_calls.inc(1 if rows else 0)
+            self._m_rows.inc(rows)
+            return out
 
     # -- one flattened batch over all slots' pending expansions ---------
     def _expand_batched(self, slots) -> dict:

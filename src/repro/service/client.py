@@ -40,6 +40,8 @@ from typing import Callable, Iterator, Optional, Union
 
 from repro.core.mcts import Environment, SimulationBackend
 from repro.core.tree import TreeConfig
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import Tracer
 from repro.service.pool import MoveEvent, SearchRequest, SearchResult
 from repro.service.scheduler_core import SchedulePolicy, SchedulerCore
 
@@ -62,11 +64,14 @@ class SearchHandle:
     # ---- state ----
     def done(self) -> bool:
         """True once the terminal SearchResult exists — by completion,
-        cancel() or deadline eviction."""
-        return self.uid in self._client.core.results
+        cancel() or deadline eviction — even if the result has since
+        been dropped by the retired-pool result TTL (status "expired")."""
+        core = self._client.core
+        return self.uid in core.results or self.uid in core.expired_uids
 
     def status(self) -> str:
-        """'queued' | 'active' | 'done' | 'cancelled' | 'evicted'."""
+        """'queued' | 'active' | 'done' | 'cancelled' | 'evicted' |
+        'expired' (result dropped by the retired-pool TTL)."""
         res = self._client.core.results.get(self.uid)
         if res is not None:
             if res.deadline_evicted:
@@ -74,6 +79,8 @@ class SearchHandle:
             if res.cancelled:
                 return "cancelled"
             return "done"
+        if self.uid in self._client.core.expired_uids:
+            return "expired"
         pool = self._client.core.pools.get(self._key)
         if pool is not None and any(
                 s is not None and s.req.uid == self.uid
@@ -96,6 +103,11 @@ class SearchHandle:
             ticks += 1
         res = core.results.get(self.uid)
         if res is None:
+            if self.uid in core.expired_uids:
+                raise RuntimeError(
+                    f"request uid={self.uid} result expired: it outlived "
+                    f"result_ttl_ticks={core.result_ttl_ticks} on a "
+                    f"retired pool and was dropped")
             raise RuntimeError(
                 f"request uid={self.uid} has no result yet "
                 f"(status={self.status()!r}); poll() the client or call "
@@ -139,6 +151,16 @@ class SearchClient:
     default: whenever the policy gangs), and `retire_after_ticks` (cold
     pools release their arena after this many idle global ticks and are
     resurrected on demand).
+
+    Observability: `trace=True` (or a Tracer instance) records phase and
+    request-lifecycle spans, exported with `trace_export()` as
+    Chrome-trace JSON for ui.perfetto.dev; `metrics=True` (or a
+    MetricsRegistry) collects scheduler/pool telemetry rendered by
+    `metrics()` in Prometheus exposition format.  `result_ttl_ticks`
+    drops completed results of retired pools after that many global
+    ticks (their handles report status "expired").  All three are off by
+    default; traced runs are bit-identical to untraced ones
+    (tests/test_executor_matrix.py).
     """
 
     def __init__(
@@ -158,7 +180,17 @@ class SearchClient:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        trace: Union[bool, Tracer] = False,
+        metrics: Union[bool, MetricsRegistry] = False,
+        trace_capacity: int = 1 << 16,
+        result_ttl_ticks: Optional[int] = None,
     ):
+        self.tracer: Optional[Tracer] = (
+            trace if isinstance(trace, Tracer)
+            else Tracer(capacity=trace_capacity) if trace else None)
+        self.registry: Optional[MetricsRegistry] = (
+            metrics if isinstance(metrics, MetricsRegistry)
+            else MetricsRegistry() if metrics else None)
         self.core = SchedulerCore(
             env, sim, G, p, executor=executor, default_cfg=default_cfg,
             policy=policy, fuse_across_pools=fuse_across_pools,
@@ -168,7 +200,9 @@ class SearchClient:
             compact_threshold=compact_threshold,
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
-            expansion=expansion)
+            expansion=expansion,
+            tracer=self.tracer, metrics=self.registry,
+            result_ttl_ticks=result_ttl_ticks)
         self._handles: dict[int, SearchHandle] = {}
 
     # ---- submission ----
@@ -227,6 +261,22 @@ class SearchClient:
 
     def pool_summaries(self) -> list[dict]:
         return self.core.pool_summaries()
+
+    # ---- observability ----
+    def metrics(self) -> str:
+        """One Prometheus-exposition-format snapshot of every metric, or
+        "" when the client was built without `metrics=True`."""
+        return "" if self.registry is None else self.registry.render()
+
+    def trace_export(self, path=None) -> dict:
+        """The recorded trace as Chrome-trace JSON (open at
+        https://ui.perfetto.dev); with `path` the JSON is also written
+        there.  Requires `trace=True` (or a Tracer) at construction."""
+        if self.tracer is None:
+            raise RuntimeError(
+                "tracing is off: build the client with trace=True (or "
+                "pass a repro.obs.Tracer) to record spans")
+        return self.tracer.export(path)
 
     def close(self):
         self.core.close()

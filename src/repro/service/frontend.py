@@ -55,6 +55,8 @@ class ServiceFrontend:
         expansion: str = "loop",
         policy: Union[str, SchedulePolicy] = "round-robin",
         retire_after_ticks: Optional[int] = None,
+        tracer=None,
+        metrics=None,
     ):
         self.client = SearchClient(
             env, sim, G=G, p=p, executor=executor, default_cfg=default_cfg,
@@ -63,7 +65,9 @@ class ServiceFrontend:
             compact_threshold=compact_threshold,
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
-            expansion=expansion)
+            expansion=expansion,
+            trace=tracer if tracer is not None else False,
+            metrics=metrics if metrics is not None else False)
         self.core = self.client.core
 
     # ---- historical attribute surface (delegated) ----

@@ -88,6 +88,13 @@ from repro.core.expand import ExpansionEngine
 from repro.core.mcts import Environment, SimulationBackend
 from repro.core.state_table import StateTable
 from repro.core.tree import NULL, TreeConfig, bucket_key
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
+
+
+def bucket_label(cfg: TreeConfig) -> str:
+    """Human-readable bucket tag for metric labels and trace tracks."""
+    return f"X{cfg.X}_D{cfg.D}_Fp{cfg.Fp}"
 
 
 @dataclasses.dataclass
@@ -126,6 +133,7 @@ class SearchResult:
     done_at: float = 0.0
     cancelled: bool = False          # cancel() or deadline eviction
     deadline_evicted: bool = False   # the cancel came from a deadline
+    done_tick: int = -1              # global tick at completion (result TTL)
 
 
 @dataclasses.dataclass
@@ -168,6 +176,7 @@ class _PendingStep:
     sim_states: np.ndarray       # [sum_p, ...] fused Simulation inputs
     t_intree: float = 0.0        # begin-side wall, folded into the pool's
     t_host: float = 0.0          # timing stats at finish time
+    tok: object = None           # open "superstep" span (obs.trace)
 
 
 @dataclasses.dataclass
@@ -250,19 +259,61 @@ class ArenaPool:
         persistent_compaction: bool = True,
         expansion: str = "loop",
         expander: Optional[ExpansionEngine] = None,
+        tracer=None,
+        metrics=None,
     ):
         self.cfg, self.env, self.sim = cfg, env, sim
         self.G, self.p = G, p
         self.executor_name = executor
         self.alternating_signs = alternating_signs
         self.reuse_subtree = reuse_subtree
+        # observability: phase spans on this pool's own trace track (gang
+        # ticks interleave pools' begin/finish halves — per-pool tracks
+        # keep each timeline properly nested), metrics labelled by bucket.
+        # Both default to the shared no-op instances.
+        self.trace = NULL_TRACER if tracer is None else tracer
+        self.registry = NULL_REGISTRY if metrics is None else metrics
+        label = bucket_label(cfg)
+        self._track = self.trace.track(f"pool:{label}")
+        reg = self.registry
+        self._m_queue = reg.gauge(
+            "service_queue_depth", "requests queued, not yet admitted",
+            bucket=label)
+        self._m_active = reg.gauge(
+            "service_active_slots", "occupied arena slots", bucket=label)
+        self._m_admitted = reg.counter(
+            "service_admitted_total", "requests admitted into a slot",
+            bucket=label)
+        self._m_wait = reg.histogram(
+            "service_admission_wait_ticks",
+            "ticks spent queued before admission", bucket=label)
+        self._m_completed = reg.counter(
+            "service_completed_total", "requests finished (results emitted)",
+            bucket=label)
+        self._m_supersteps = reg.counter(
+            "service_supersteps_total", "supersteps executed", bucket=label)
+        self._m_sim_rows = reg.histogram(
+            "service_sim_batch_rows", "rows per fused simulation batch",
+            bucket=label)
+        self._m_retire = reg.counter(
+            "service_retirements_total", "cold-pool arena releases",
+            bucket=label)
+        self._m_gathers = reg.counter(
+            "service_compaction_events_total",
+            "compaction-session decisions by kind",
+            bucket=label, event="gather")
+        self._m_reuses = reg.counter(
+            "service_compaction_events_total", bucket=label, event="reuse")
+        self._m_scatters = reg.counter(
+            "service_compaction_events_total", bucket=label, event="scatter")
         # host-expansion engine: "loop" per-worker env.step, "vector" ONE
         # flattened step_batch over all slots' pending expansions, "pool"
         # the process-pool scalar fallback (core.expand) — bit-identical.
         # A scheduler serving several pools passes one shared engine in.
         self._owns_expander = expander is None
-        self.expander = ExpansionEngine(env, expansion) if expander is None \
-            else expander
+        self.expander = ExpansionEngine(
+            env, expansion, tracer=tracer, metrics=metrics) \
+            if expander is None else expander
         # occupancy A/G at or below this gathers active slots into a dense
         # sub-arena for the device phases.  Opt-in (0.0 = always masked).
         # Hysteresis: once compacted, the pool stays compacted until
@@ -318,6 +369,11 @@ class ArenaPool:
         if self.retired:
             self._resurrect()
         self.queue.append(req)
+        self.trace.async_begin(
+            "request", req.uid, cat="request", tid=self._track,
+            uid=req.uid, seed=req.seed, budget=req.budget, moves=req.moves)
+        self.trace.instant("submit", cat="request", tid=self._track,
+                           uid=req.uid)
 
     def _now(self) -> int:
         return self.clock() if self.clock is not None else self.stats.ticks
@@ -359,6 +415,10 @@ class ArenaPool:
                 wait = max(0, self._now() - max(req.submit_tick, 0))
                 self.stats.wait_supersteps[wait] = (
                     self.stats.wait_supersteps.get(wait, 0) + 1)
+                self._m_admitted.inc()
+                self._m_wait.observe(wait)
+                self.trace.instant("admit", cat="request", tid=self._track,
+                                   uid=req.uid, slot=g, wait=wait)
                 active += 1
                 break
 
@@ -403,6 +463,12 @@ class ArenaPool:
         if reason == "deadline":
             res.deadline_evicted = True
             self.stats.deadline_evictions += 1
+        self.registry.counter(
+            "service_evictions_total", "requests cancelled or evicted",
+            bucket=bucket_label(self.cfg), reason=reason).inc()
+        self.trace.instant("evict" if reason == "deadline" else "cancel",
+                           cat="request", tid=self._track, uid=res.uid,
+                           reason=reason)
 
     # ---- cold-pool retirement ----
     def retire(self) -> bool:
@@ -419,6 +485,8 @@ class ArenaPool:
         self.sts = None
         self.retired = True
         self.stats.retirements += 1
+        self._m_retire.inc()
+        self.trace.instant("retire", cat="pool", tid=self._track)
         return True
 
     def _resurrect(self):
@@ -428,12 +496,14 @@ class ArenaPool:
         self.retired = False
         self.idle_ticks = 0
         self._compacting = False   # fresh arena, fresh hysteresis state
+        self.trace.instant("resurrect", cat="pool", tid=self._track)
 
     # ---- session plumbing ----
     def _close_session(self):
         ses, self._session = self._session, None
         if ses is not None and ses.close():
             self.stats.session_scatters += 1
+            self._m_scatters.inc()
 
     def _sizes(self) -> np.ndarray:
         ses = self._session
@@ -456,6 +526,7 @@ class ArenaPool:
         ses = self._session
         if ses is not None and ses.owns(int(g)) and ses.sync():
             self.stats.session_scatters += 1
+            self._m_scatters.inc()
         return self.exec.slot_snapshot(g)
 
     def _invalidate_session(self, g: int):
@@ -486,11 +557,14 @@ class ArenaPool:
             if ses is not None and ses.matches(act_idx, Gc):
                 session_state = "resident"
                 self.stats.session_reuses += 1
+                self._m_reuses.inc()
             else:
                 self._close_session()
-                ses = self._session = self.exec.open_session(act_idx, Gc)
+                ses = self._session = self.exec.open_session(
+                    act_idx, Gc, tracer=self.trace, tid=self._track)
                 session_state = "gather"
                 self.stats.session_gathers += 1
+                self._m_gathers.inc()
             ses.mark_superstep()
         else:
             self._close_session()
@@ -511,23 +585,34 @@ class ArenaPool:
         no slot is occupied.  The caller evaluates the rows (alone or
         fused with other pools') and hands them to finish_superstep."""
         self.stats.ticks += 1
+        tok = self.trace.begin("superstep", cat="phase", tid=self._track,
+                               tick=self._now())
         self._admit()
+        self._m_queue.set(len(self.queue))
         active = self._active()
+        self._m_active.set(int(active.sum()))
         if not active.any():
+            self.trace.end(tok)
             return None
         t0 = time.perf_counter()
         ex, ex_active, rows, act_idx = self._pick_execution(active)
-        sel_dev = ex.selection(ex_active, self.p)
-        sel = ex.sel_to_host(sel_dev)                         # [Ge, p, ...]
-        new_nodes = ex.insert(ex_active, sel_dev)             # [Ge, p, Fp]
+        with self.trace.span("select", cat="phase", tid=self._track,
+                             slots=len(act_idx)):
+            sel_dev = ex.selection(ex_active, self.p)
+            sel = ex.sel_to_host(sel_dev)                     # [Ge, p, ...]
+            new_nodes = ex.insert(ex_active, sel_dev)         # [Ge, p, Fp]
+            if self.trace.enabled:
+                ex.block()   # attribute device time to select, honestly
         t1 = time.perf_counter()
 
         # host expansion: every slot's pending expansions through the
         # engine (one flattened env batch in vector/pool mode); the fused
-        # Simulation rows are the pending step's hand-off
+        # Simulation rows are the pending step's hand-off.  The engine
+        # emits the "expand" span on this pool's track.
         hx = self.expander.expand(
             [(g, self.sts[g], {k: v[r] for k, v in sel.items()},
-              new_nodes[r]) for r, g in zip(rows, act_idx)])
+              new_nodes[r]) for r, g in zip(rows, act_idx)],
+            tid=self._track)
         t_x = time.perf_counter()
         self.stats.t_expand += t_x - t1
         sim_states = np.concatenate([hx[g].sim_states for g in act_idx])
@@ -535,7 +620,7 @@ class ArenaPool:
         return _PendingStep(
             ex=ex, ex_active=ex_active, rows=rows, act_idx=act_idx,
             sel_dev=sel_dev, hx=hx, sim_states=sim_states,
-            t_intree=t1 - t0, t_host=t2 - t1)
+            t_intree=t1 - t0, t_host=t2 - t1, tok=tok)
 
     def finish_superstep(self, pend: _PendingStep, values, priors,
                          t_sim: float = 0.0, own_batch: bool = True):
@@ -571,9 +656,13 @@ class ArenaPool:
             vals[r] = values_fx[row]
         t4 = time.perf_counter()
 
-        ex.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
-        ex.backup(pend.ex_active, pend.sel_dev, sim_nodes, vals,
-                  self.alternating_signs)
+        with self.trace.span("backup", cat="phase", tid=self._track,
+                             slots=len(act_idx)):
+            ex.finalize(fin_nodes, fin_na, fin_term, fin_pp, fin_pf)
+            ex.backup(pend.ex_active, pend.sel_dev, sim_nodes, vals,
+                      self.alternating_signs)
+            if self.trace.enabled:
+                ex.block()   # fence: device backup time stays in this span
         if ex is not self.exec:
             self.stats.compacted_supersteps += 1
             if not self.persistent_compaction:
@@ -585,8 +674,13 @@ class ArenaPool:
         self.stats.occupancy_sum += len(act_idx) / self.G
         self.stats.t_intree += pend.t_intree + (t5 - t4)
         self.stats.t_host += pend.t_host + (t4 - t3)
+        self._m_supersteps.inc()
+        if own_batch:
+            self._m_sim_rows.observe(len(pend.sim_states))
 
         self._commit_moves(act_idx)
+        if pend.tok is not None:
+            self.trace.end(pend.tok)
 
     # ---- one fused superstep over all occupied slots ----
     def superstep(self) -> bool:
@@ -594,7 +688,9 @@ class ArenaPool:
         if pend is None:
             return False
         t2 = time.perf_counter()
-        values, priors = self.sim.evaluate(pend.sim_states)
+        with self.trace.span("simulate", cat="phase", tid=self._track,
+                             rows=len(pend.sim_states)):
+            values, priors = self.sim.evaluate(pend.sim_states)
         t_sim = time.perf_counter() - t2
         self.finish_superstep(pend, values, priors, t_sim=t_sim)
         return True
@@ -635,6 +731,9 @@ class ArenaPool:
         slot.res.visit_counts.append(counts)
         slot.moves_done += 1
         last = bool(term) or slot.moves_done >= slot.req.moves
+        self.trace.instant("move-commit", cat="request", tid=self._track,
+                           uid=slot.req.uid, move=slot.moves_done - 1,
+                           action=a, last=last)
         if self.move_listener is not None:
             self.move_listener(MoveEvent(
                 uid=slot.req.uid, move_index=slot.moves_done - 1, action=a,
@@ -662,8 +761,15 @@ class ArenaPool:
 
     def _finish(self, res: SearchResult):
         res.done_at = time.perf_counter()
+        res.done_tick = self._now()
         self.completed.append(res)
         self.stats.completed += 1
+        self._m_completed.inc()
+        status = ("evicted" if res.deadline_evicted
+                  else "cancelled" if res.cancelled else "done")
+        self.trace.async_end("request", res.uid, cat="request",
+                             tid=self._track, uid=res.uid, status=status,
+                             moves=len(res.actions))
         if self.result_listener is not None:
             self.result_listener(res)
 

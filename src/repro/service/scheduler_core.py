@@ -60,8 +60,11 @@ import numpy as np
 from repro.core.expand import ExpansionEngine
 from repro.core.mcts import Environment, SimulationBackend
 from repro.core.tree import TreeConfig, bucket_key, canonical_config
+from repro.obs.metrics import NULL_REGISTRY
+from repro.obs.trace import NULL_TRACER
 from repro.service.pool import (
     ArenaPool, MoveEvent, SearchRequest, SearchResult, ServiceStats,
+    bucket_label,
 )
 
 __all__ = [
@@ -121,10 +124,27 @@ class RoundRobinPolicy(SchedulePolicy):
 class WeightedQueueDepthPolicy(SchedulePolicy):
     """Gang tick, deepest backlog first, admission caps proportional to
     queue-depth share (per-bucket G sizing: a bucket with 80% of the
-    backlog may fill 80% of its slots; every bucket keeps at least 1)."""
+    backlog may fill 80% of its slots; every bucket keeps at least 1).
+
+    The share is computed on EWMA-smoothed depths, not instantaneous
+    ones: a one-tick burst into one bucket no longer slams every other
+    bucket's cap to 1 and back (the carried-forward ROADMAP limit).
+    ``ewma_alpha`` is the usual smoothing weight on the newest sample —
+    1.0 recovers the unsmoothed behavior.  A bucket's EWMA is seeded
+    with its first observed depth, so the first tick a bucket has work
+    behaves exactly as before smoothing existed.  The smoothed load is
+    exported per bucket as the `service_smoothed_load` gauge."""
 
     name = "weighted-queue-depth"
     gang = True
+
+    def __init__(self, ewma_alpha: float = 0.5):
+        if not 0.0 < ewma_alpha <= 1.0:
+            raise ValueError(
+                f"ewma_alpha must be in (0, 1]: {ewma_alpha}")
+        self.ewma_alpha = ewma_alpha
+        self._ewma: dict = {}
+        self._last_tick = None
 
     def order(self, core):
         keys = [k for k in core._order if core.pools[k].has_work()]
@@ -132,9 +152,27 @@ class WeightedQueueDepthPolicy(SchedulePolicy):
             keys, key=lambda k: (-_depth(core.pools[k]),
                                  core._order.index(k)))
 
-    def admit_limits(self, core):
+    def _smoothed_depths(self, core) -> dict:
+        """EWMA over each with-work bucket's backlog, advanced at most
+        once per core tick (admit_limits may be probed more often)."""
         depths = {k: _depth(core.pools[k]) for k in core._order
                   if core.pools[k].has_work()}
+        if core.ticks != self._last_tick:
+            self._last_tick = core.ticks
+            a = self.ewma_alpha
+            reg = getattr(core, "registry", NULL_REGISTRY)
+            for k, d in depths.items():
+                prev = self._ewma.get(k)
+                self._ewma[k] = d if prev is None else a * d + (1 - a) * prev
+                reg.gauge(
+                    "service_smoothed_load",
+                    "EWMA-smoothed backlog (queued + in-flight) per bucket",
+                    bucket=bucket_label(core.pools[k].cfg),
+                ).set(round(self._ewma[k], 4))
+        return {k: self._ewma[k] for k in depths}
+
+    def admit_limits(self, core):
+        depths = self._smoothed_depths(core)
         total = sum(depths.values())
         if total == 0:
             return {}
@@ -211,12 +249,35 @@ class SchedulerCore:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        tracer=None,
+        metrics=None,
+        result_ttl_ticks: Optional[int] = None,
     ):
         self.env, self.sim = env, sim
         self.G, self.p = G, p
         self.executor = executor
         self.default_cfg = default_cfg
         self.policy = make_policy(policy)
+        # observability: the scheduler claims trace track 0; each pool
+        # gets its own track as it is created (pool.py).  No-op defaults.
+        self.trace = NULL_TRACER if tracer is None else tracer
+        self.registry = NULL_REGISTRY if metrics is None else metrics
+        self._track = self.trace.track("scheduler")
+        self._m_ticks = self.registry.counter(
+            "service_ticks_total", "global scheduler ticks")
+        self._m_xpool = self.registry.counter(
+            "service_xpool_batches_total",
+            "fused evaluate() calls spanning >1 pool")
+        self._m_fused_rows = self.registry.histogram(
+            "service_fused_batch_rows",
+            "rows per cross-pool fused simulation batch")
+        self._m_expired = self.registry.counter(
+            "service_expired_results_total",
+            "retired-pool results dropped by the result TTL")
+        # results of retired pools older than this many ticks are dropped
+        # (handles report status "expired"); None keeps them forever
+        self.result_ttl_ticks = result_ttl_ticks
+        self.expired_uids: set[int] = set()
         # fuse the gang tick's Simulation rows across pools into ONE
         # evaluate() call; None = whenever the policy gangs.  False keeps
         # gang ticks but evaluates per pool (the bit-identity control).
@@ -232,7 +293,8 @@ class SchedulerCore:
         )
         # ONE host-expansion engine (and process pool, in "pool" mode)
         # shared by every bucket
-        self.expander = ExpansionEngine(env, expansion)
+        self.expander = ExpansionEngine(env, expansion, tracer=tracer,
+                                        metrics=metrics)
         self.pools: dict = {}
         self._order: list = []          # bucket keys in creation order
         self.last_key = None            # bucket of the latest superstep
@@ -256,6 +318,7 @@ class SchedulerCore:
             pool = ArenaPool(
                 canonical_config(cfg), self.env, self.sim, self.G, self.p,
                 executor=self.executor, expander=self.expander,
+                tracer=self.trace, metrics=self.registry,
                 **self._pool_kw)
             pool.clock = lambda: self.ticks
             pool.move_listener = self._on_move
@@ -322,6 +385,9 @@ class SchedulerCore:
         fused gang), then sweep idle pools toward retirement.  False when
         no pool had work."""
         self.ticks += 1
+        self._m_ticks.inc()
+        tok = self.trace.begin("tick", cat="sched", tid=self._track,
+                               tick=self.ticks)
         self._expire_deadlines()
         limits = self.policy.admit_limits(self)
         for key, pool in self.pools.items():
@@ -343,6 +409,8 @@ class SchedulerCore:
         if pending:
             self._evaluate_and_finish(pending)
         self._sweep_retirement(advanced={id(pool) for pool, _ in pending})
+        if tok is not None:
+            self.trace.end(tok)
         return bool(pending)
 
     def _evaluate_and_finish(self, pending):
@@ -354,8 +422,12 @@ class SchedulerCore:
             fused = np.concatenate(
                 [pend.sim_states for _, pend in pending])
             t0 = time.perf_counter()
-            values, priors = self.sim.evaluate(fused)
+            with self.trace.span("simulate", cat="phase", tid=self._track,
+                                 rows=len(fused), pools=len(pending)):
+                values, priors = self.sim.evaluate(fused)
             t_sim = time.perf_counter() - t0
+            self._m_xpool.inc()
+            self._m_fused_rows.observe(len(fused))
             self.xpool_batches += 1
             self.xpool_rows_max = max(self.xpool_rows_max, len(fused))
             self.xpool_pool_rows_max = max(self.xpool_pool_rows_max,
@@ -370,7 +442,10 @@ class SchedulerCore:
         else:
             for pool, pend in pending:
                 t0 = time.perf_counter()
-                values, priors = self.sim.evaluate(pend.sim_states)
+                with pool.trace.span("simulate", cat="phase",
+                                     tid=pool._track,
+                                     rows=len(pend.sim_states)):
+                    values, priors = self.sim.evaluate(pend.sim_states)
                 t_sim = time.perf_counter() - t0
                 pool.finish_superstep(pend, values, priors, t_sim=t_sim)
 
@@ -383,6 +458,30 @@ class SchedulerCore:
                 pool.idle_ticks += 1
                 if ttl is not None and pool.idle_ticks >= ttl:
                     pool.retire()
+            if pool.retired:
+                self._expire_results(pool)
+
+    def _expire_results(self, pool: ArenaPool):
+        """Result TTL (retired pools only): completed results older than
+        `result_ttl_ticks` global ticks are dropped from the pool, the
+        handle surface and the move log — retirement bounds arena memory,
+        this bounds the host-side result ledger.  Expired uids stay in
+        `expired_uids` so their handles report status "expired" instead
+        of reverting to "unknown"."""
+        if self.result_ttl_ticks is None or not pool.completed:
+            return
+        keep = []
+        for res in pool.completed:
+            if 0 <= res.done_tick <= self.ticks - self.result_ttl_ticks:
+                self.expired_uids.add(res.uid)
+                self.results.pop(res.uid, None)
+                self.move_log.pop(res.uid, None)
+                self._m_expired.inc()
+                self.trace.instant("expire", cat="request",
+                                   tid=self._track, uid=res.uid)
+            else:
+                keep.append(res)
+        pool.completed[:] = keep
 
     def run(self, max_ticks: int = 100_000) -> list[SearchResult]:
         """Drain every pool (compatibility surface for the adapters; new

@@ -370,6 +370,96 @@ def test_busy_pool_never_retires():
     cl.close()
 
 
+def test_result_ttl_expires_retired_pool_results():
+    """Result TTL: a retired bucket's completed results are dropped after
+    `result_ttl_ticks` global ticks — handle reports "expired" (done()
+    stays True), result() raises, the move log is freed, and the expiry
+    is counted in the registry.  Live buckets are untouched."""
+    cl = _client(G=2, retire_after_ticks=2, result_ttl_ticks=4,
+                 metrics=True)
+    hb = cl.submit(SearchRequest(uid=0, seed=0, budget=2, cfg=CFG_B))
+    h_long = cl.submit(SearchRequest(uid=1, seed=1, budget=60, cfg=CFG_A))
+    cl.run_until(lambda c: c.handle(0).status() == "expired")
+    assert hb.status() == "expired" and hb.done()
+    with pytest.raises(RuntimeError, match="expired"):
+        hb.result(wait=False)
+    assert 0 not in cl.core.results and 0 not in cl.core.move_log
+    assert cl.core.pools[bucket_key(CFG_B)].completed == []
+    assert cl.registry.get("service_expired_results_total").value == 1
+    # the still-live bucket keeps its result forever (pool never retired)
+    assert h_long.result().actions and h_long.status() == "done"
+    cl.close()
+
+
+def test_no_ttl_keeps_retired_pool_results_forever():
+    cl = _client(G=2, retire_after_ticks=2)        # result_ttl_ticks=None
+    hb = cl.submit(SearchRequest(uid=0, seed=0, budget=2, cfg=CFG_B))
+    cl.submit(SearchRequest(uid=1, seed=1, budget=40, cfg=CFG_A))
+    cl.drain()
+    assert cl.core.pools[bucket_key(CFG_B)].retired
+    assert hb.status() == "done" and hb.result(wait=False).actions
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# EWMA-smoothed weighted-queue-depth admission caps
+# ---------------------------------------------------------------------------
+
+class _FakePool:
+    def __init__(self, cfg, G, queued):
+        self.cfg, self.G = cfg, G
+        self.queue = [None] * queued
+
+    def has_work(self):
+        return True
+
+    def load(self):
+        return 0
+
+
+class _FakeCore:
+    def __init__(self, pools):
+        self.pools = pools
+        self._order = list(pools)
+        self.ticks = 1
+        from repro.obs import MetricsRegistry
+        self.registry = MetricsRegistry()
+
+
+def test_weighted_policy_smooths_admission_caps():
+    """EWMA smoothing: when a bucket's burst drains in one tick, its cap
+    decays over several ticks instead of collapsing straight to the
+    floor, the EWMA is seeded with the first observed depth (tick 1
+    behaves exactly as unsmoothed), the update advances at most once per
+    tick, and the smoothed load is exported as a per-bucket gauge."""
+    from repro.service.pool import bucket_label
+    from repro.service.scheduler_core import WeightedQueueDepthPolicy
+
+    pol = WeightedQueueDepthPolicy(ewma_alpha=0.5)
+    a, b = _FakePool(CFG_A, 4, 8), _FakePool(CFG_B, 4, 8)
+    core = _FakeCore({"a": a, "b": b})
+    assert pol.admit_limits(core) == {"a": 2, "b": 2}   # seeded = unsmoothed
+    b.queue = []          # the whole burst drains out of bucket b at once
+    caps = []
+    for tick in range(2, 6):
+        core.ticks = tick
+        caps.append(pol.admit_limits(core)["b"])
+    # unsmoothed would slam to the floor (1) immediately; EWMA decays
+    assert caps[0] > 1
+    assert all(x >= y for x, y in zip(caps, caps[1:]))  # monotone decay
+    assert caps[-1] >= 1
+    # idempotent within a tick: probing again does not advance the EWMA
+    assert pol.admit_limits(core)["b"] == caps[-1]
+    gauge = core.registry.get("service_smoothed_load",
+                              bucket=bucket_label(CFG_B))
+    assert gauge is not None and 0 < gauge.value < 8
+    # alpha=1 recovers the unsmoothed behavior; out-of-range rejected
+    flat = WeightedQueueDepthPolicy(ewma_alpha=1.0)
+    assert flat.admit_limits(core)["b"] == 1
+    with pytest.raises(ValueError):
+        WeightedQueueDepthPolicy(ewma_alpha=0.0)
+
+
 # ---------------------------------------------------------------------------
 # stats: monotonic ticks + wait histogram
 # ---------------------------------------------------------------------------

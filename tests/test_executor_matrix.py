@@ -235,6 +235,40 @@ def test_client_xpool_fused_matches_dedicated_services(executor):
                 err_msg=f"{label} field={k}")
 
 
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+def test_traced_run_bit_identical_to_untraced(executor):
+    """Acceptance: tracing + metrics never change WHAT is computed — the
+    matrix schedule with a live Tracer/MetricsRegistry (device-fencing
+    spans included) equals the executor's own untraced masked/loop run,
+    and the recorded trace covers the superstep phases and round-trips
+    through json."""
+    import json
+
+    from repro.obs import MetricsRegistry, Tracer
+
+    cl = SearchClient(ENV, BanditValueBackend(), G=G, p=P,
+                      executor=executor, default_cfg=CFG,
+                      compact_threshold=0.7, persistent_compaction=True,
+                      trace=Tracer(), metrics=MetricsRegistry())
+    try:
+        handles = [cl.submit(SearchRequest(cfg=CFG, **kw))
+                   for kw in _SCHEDULE]
+        done = {h.uid: h.result() for h in handles}
+        stats = cl.stats
+        trace = cl.trace_export()
+        metrics = cl.metrics()
+    finally:
+        cl.close()
+    _assert_identical((done, stats.supersteps), _run(executor, 0.0, "loop"),
+                      f"traced/{executor}")
+    names = {e["name"] for e in trace["traceEvents"]}
+    for phase in ("superstep", "select", "expand", "simulate", "backup",
+                  "compact-gather", "compact-scatter"):
+        assert phase in names, f"{executor}: phase {phase!r} missing"
+    json.loads(json.dumps(trace))        # valid Chrome-trace JSON
+    assert "service_supersteps_total" in metrics
+
+
 def test_pool_expansion_matches_oracle():
     """The process-pool fallback is schedule- and bit-identical too (one
     combo: spawning pools under every executor adds nothing)."""
