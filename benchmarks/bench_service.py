@@ -37,6 +37,12 @@ largest single-pool share inside one (fused must be strictly larger at
 heterogeneous load — the acceptance gate) plus the fused-vs-per-pool
 wall-clock.
 
+service_dispatch_k_* rows sweep the fused K-superstep device dispatch
+(supersteps_per_dispatch ∈ {1,2,4,8} × faithful/pallas at G=16): K>1
+runs up to K supersteps per compiled lax.while_loop program instead of
+returning to Python between every phase — the speedup_vs_k1 field is
+the ROADMAP item 2 acceptance gate.
+
 service_obs_overhead_G<g> pins the observability layer's cost: the same
 weighted-queue-depth heterogeneous workload with tracing + metrics
 enabled vs off (enabled wall overhead must stay < 5%), plus a direct
@@ -225,6 +231,53 @@ def _policy_rows(G, p, budget, X):
         f"speedup={wall_split / max(wall_fused, 1e-9):.2f}x")
 
 
+def _dispatch_k_rows(executors, G, p, budget, X, ks, reps: int = 3):
+    """Fused K-superstep device dispatch (repro.core.fused): the same
+    refill workload as the full-occupancy rows, swept over
+    supersteps_per_dispatch.  K=1 is the classic phase-by-phase path;
+    K>1 runs up to K supersteps per compiled lax.while_loop program,
+    escaping only at move commits or host-bound expansions.  The
+    speedup_vs_k1 field is the acceptance gate for ROADMAP item 2 —
+    the per-superstep dispatch overhead the fusion removes."""
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    # ONE backend instance across warmup + measurement: the fused
+    # program cache keys env/sim by identity, so a fresh backend per
+    # build would recompile inside the timed run
+    sim = BanditValueBackend()
+    cfg = TreeConfig(X=X, F=6, D=8)
+    n = 2 * G
+    for executor in executors:
+        base_us = None
+        for K in ks:
+            def build():
+                svc = SearchService(cfg, env, sim, G=G,
+                                    p=p, executor=executor,
+                                    supersteps_per_dispatch=K)
+                for i in range(n):
+                    svc.submit(SearchRequest(uid=i, seed=i, budget=budget))
+                return svc
+            build().run()            # warmup (jit compile, per-K program)
+            wall = float("inf")      # min-of-reps: dispatch overhead is
+            for _ in range(reps):    # exactly what noise drowns
+                svc = build()
+                t0 = time.perf_counter()
+                done = svc.run()
+                wall = min(wall, time.perf_counter() - t0)
+            assert len(done) == n
+            s = svc.stats
+            us = wall / max(s.supersteps, 1) * 1e6
+            if K == 1:
+                base_us = us
+            csv_line(
+                f"service_dispatch_k_{executor}_K{K}_G{G}", us,
+                f"searches_per_sec={len(done) / wall:.2f} "
+                f"supersteps={s.supersteps} "
+                f"fused_dispatches={s.fused_dispatches} "
+                f"ran_k={s.fused_ran_k} commit={s.fused_escape_commit} "
+                f"expand={s.fused_escape_expand} "
+                f"speedup_vs_k1={base_us / max(us, 1e-9):.2f}x")
+
+
 def _obs_rows(G, p, budget, X, reps: int = 3):
     """Observability overhead, two gates:
 
@@ -335,6 +388,15 @@ def run(smoke: bool = False):
 
     # SearchClient schedule policies + the cross-pool fused evaluate
     _policy_rows(2 if smoke else 4, p, budget, X)
+
+    # fused K-superstep device dispatch: supersteps per compiled program
+    # (ROADMAP item 2 acceptance — K>1 must beat K=1 end to end).  X is
+    # pinned to the dispatch-bound regime: the sweep measures host
+    # round-trip amortization, which X=512 XLA kernel time drowns.
+    _dispatch_k_rows(("faithful", "pallas"), 2 if smoke else 16, p,
+                     budget=4 if smoke else budget,
+                     X=X if smoke else 128,
+                     ks=(1, 4) if smoke else (1, 2, 4, 8))
 
     # observability overhead: tracing+metrics enabled vs off, plus the
     # disabled no-op path measured directly (the CI-gated ~0% claim)

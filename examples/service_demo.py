@@ -77,6 +77,7 @@ def run_client(args):
         executor=args.executor, expansion=args.expansion,
         policy=args.policy, retire_after_ticks=args.retire_after,
         compact_threshold=0.5, compact_exit_threshold=0.75,
+        supersteps_per_dispatch=args.supersteps_per_dispatch,
         trace=bool(args.trace_out), metrics=args.metrics,
     )
     handles = [client.submit(SearchRequest(
@@ -149,6 +150,7 @@ def run_frontend(args):
         executor=args.executor, expansion=args.expansion,
         policy=args.policy,
         compact_threshold=0.5, compact_exit_threshold=0.75,
+        supersteps_per_dispatch=args.supersteps_per_dispatch,
     )
     for i in range(12):
         fe.submit(SearchRequest(
@@ -195,6 +197,14 @@ def main():
                          "which pools advance each tick and how buckets "
                          "admit; weighted-queue-depth gang ticks fuse ONE "
                          "evaluate() batch across every pool")
+    ap.add_argument("--supersteps-per-dispatch", type=int, default=1,
+                    metavar="K",
+                    help="fused K-superstep device dispatch: run up to K "
+                         "supersteps per compiled program, escaping only "
+                         "at move commits or host-bound expansions.  K>1 "
+                         "needs device-evaluable env + sim twins (the "
+                         "bandit env here has them; host-only backends "
+                         "silently keep the K=1 phase-by-phase path)")
     ap.add_argument("--retire-after", type=int, default=12, metavar="TICKS",
                     help="client mode: idle ticks before a cold pool "
                          "releases its arena (resurrected on demand)")
@@ -227,6 +237,7 @@ def main():
         executor=args.executor,  # unified stack ("reference" = numpy oracle)
         compact_threshold=0.5,   # opt-in: gather active slots when <= half
         expansion=args.expansion,  # batched host expansion (core.expand)
+        supersteps_per_dispatch=args.supersteps_per_dispatch,
     )                            # the arena is occupied (see pool docs)
 
     for i in range(12):
@@ -238,8 +249,10 @@ def main():
         ))                                 # run exercises compaction
 
 
-    # drive superstep-by-superstep to trace the occupancy/compaction choice
-    while svc.superstep():
+    # drive dispatch-by-dispatch to trace the occupancy/compaction choice
+    # (a fused dispatch runs up to K supersteps per compiled program)
+    K = args.supersteps_per_dispatch
+    while (svc.fused_dispatch() if K > 1 else svc.superstep()):
         d = svc.last_decision
         mode = (f"session[{d['session']}] sub-arena G={d['G_exec']}"
                 if d["compacted"] else "masked full arena")

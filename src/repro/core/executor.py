@@ -86,6 +86,12 @@ class InTreeExecutor(Protocol):
                  priors_fx) -> None: ...
     def backup(self, active, sel, sim_nodes, values_fx, alternating: bool,
                dropped=None) -> None: ...
+    # OPTIONAL fused fast path (device executors only — the reference
+    # executor keeps the phase-by-phase oracle): run up to K supersteps
+    # in one compiled program; see repro.core.fused.  Absence of the
+    # attribute means "host path only" (probe with hasattr).
+    def run_supersteps(self, active, p: int, K: int, env, sim, states,
+                       budget_left, alternating: bool): ...
     def sel_to_host(self, sel) -> dict: ...
     def best_actions(self) -> np.ndarray: ...
     def sizes(self) -> np.ndarray: ...
@@ -211,6 +217,7 @@ class JaxExecutor:
                 "are faithful/relaxed/wavefront (the arena-native Pallas "
                 "kernels are PallasExecutor / executor='pallas')")
         self.cfg, self.G, self.variant = cfg, G, variant
+        self._fused_variant = variant
         self.trees = init_arena(cfg, G) if _trees is None else _trees
 
     # -- device phases -------------------------------------------------
@@ -241,7 +248,22 @@ class JaxExecutor:
             self.trees = intree.backup_arena(
                 self.cfg, self.trees, jnp.asarray(active), sel,
                 jnp.asarray(sim_nodes), jnp.asarray(values_fx), alternating)
-        jax.block_until_ready(self.trees.size)
+        # No fence: JAX async dispatch overlaps the backup with the host
+        # side of the next superstep; readers (sizes/best_actions/
+        # snapshots) block on the value they fetch, and the obs layer
+        # fences per-phase via block() when tracing.
+
+    # -- fused multi-superstep dispatch --------------------------------
+    def run_supersteps(self, active, p: int, K: int, env, sim, states,
+                       budget_left, alternating: bool):
+        """Up to K fused supersteps in one compiled program (see
+        repro.core.fused).  Mutates self.trees; returns FusedDispatch."""
+        from repro.core import fused
+
+        self.trees, disp = fused.run_supersteps(
+            self.cfg, self._fused_variant, self.trees, np.asarray(active),
+            p, K, env, sim, states, budget_left, alternating)
+        return disp
 
     # -- host-side slot access -----------------------------------------
     def reset_slot(self, g: int, root_num_actions: int):
@@ -326,6 +348,7 @@ class PallasExecutor(JaxExecutor):
     def __init__(self, cfg: TreeConfig, G: int,
                  _trees: Optional[UCTree] = None):
         super().__init__(cfg, G, "faithful", _trees=_trees)
+        self._fused_variant = "pallas"
         from repro.kernels import ops as kops  # lazy: keeps core import-light
         self._kops = kops
 
@@ -342,7 +365,7 @@ class PallasExecutor(JaxExecutor):
         self.trees = self._kops.backup_arena(
             self.cfg, self.trees, jnp.asarray(active), sel,
             jnp.asarray(sim_nodes), jnp.asarray(values_fx), alternating)
-        jax.block_until_ready(self.trees.size)
+        # no fence — same async-dispatch contract as JaxExecutor.backup
 
     def _spawn(self, trees: UCTree, Gc: int) -> "PallasExecutor":
         return PallasExecutor(self.cfg, Gc, _trees=trees)

@@ -1,10 +1,12 @@
 from repro.envs.bandit_tree import BanditTreeEnv, BanditValueBackend
 from repro.envs.ponglite import PongLiteEnv
 from repro.envs.gomoku import GomokuEnv, GomokuRolloutBackend
+from repro.envs.device import has_device_env, has_device_sim
 from repro.envs.vector import (
     PoolVectorEnv, VectorEnv, has_fused_step, has_vector_env,
 )
 
 __all__ = ["BanditTreeEnv", "BanditValueBackend", "PongLiteEnv", "GomokuEnv",
            "GomokuRolloutBackend", "PoolVectorEnv", "VectorEnv",
+           "has_device_env", "has_device_sim",
            "has_fused_step", "has_vector_env"]

@@ -44,10 +44,25 @@ class BanditValueBackend:
     """
 
     def evaluate(self, states):
-        vals = np.array(
-            [(_hash(int(s[1]), 4242) % 2000) / 1000.0 - 1.0 for s in states],
-            np.float32)
-        return vals, None
+        # NOTE: the op sequence is deliberately (exact integer subtract in
+        # f32, then ONE rounded multiply).  A divide would be rewritten to
+        # multiply-by-reciprocal by XLA's simplifier, and multiply-then-
+        # subtract gets FMA-contracted on CPU — both break the bit
+        # equality with evaluate_device that the fused dispatch's oracle
+        # tests demand.  (m - 1000) is exact: |m - 1000| < 2^11.
+        h = np.asarray(states)[:, 1].astype(np.int64)
+        m = (_hash_batch(h, 4242) % 2000).astype(np.float32)
+        return (m - np.float32(1000.0)) * np.float32(1e-3), None
+
+    def evaluate_device(self, states):
+        """Jittable twin of evaluate() — bit-equal values (see NOTE)."""
+        import jax.numpy as jnp
+
+        from repro.envs.device import hash24_device
+
+        h = states[..., 1].astype(jnp.int32)
+        m = (hash24_device(h, 4242) % 2000).astype(jnp.float32)
+        return (m - jnp.float32(1000.0)) * jnp.float32(1e-3)
 
 
 class BanditTreeEnv:
@@ -121,3 +136,43 @@ class BanditTreeEnv:
         s[:, 3] = self._na_batch(h2, d2)
         r = (_hash_batch(h2, 999) % 1000) / 1000.0 - 0.5
         return s, r, term
+
+    # ---- device twins (repro.envs.device): jittable, bit-identical ----
+    #
+    # No rewards on device: the fused dispatch only resolves expansions;
+    # rewards are consumed at move commits, which always run on host.
+    # All fields round-trip exactly through f32 (depth < 2^24, 24-bit
+    # hash, 0/1 terminal flag, n_actions <= F).
+
+    def _na_device(self, h, depth):
+        import jax.numpy as jnp
+
+        from repro.envs.device import hash24_device
+
+        if self.varying_fanout:
+            na = 1 + hash24_device(h, 7777) % self.F
+        else:
+            na = jnp.full(h.shape, self.F, jnp.int32)
+        return jnp.where(depth >= self.terminal_depth, 0, na)
+
+    def num_actions_device(self, states):
+        import jax.numpy as jnp
+
+        return states[..., 3].astype(jnp.int32)
+
+    def step_device(self, states, actions):
+        import jax.numpy as jnp
+
+        from repro.envs.device import hash24_device
+
+        d = states[..., 0].astype(jnp.int32)
+        h = states[..., 1].astype(jnp.int32)
+        a = actions.astype(jnp.int32)
+        h2, d2 = hash24_device(h, a), d + 1
+        term = d2 >= self.terminal_depth
+        s = jnp.zeros_like(states)
+        s = s.at[..., 0].set(d2.astype(states.dtype))
+        s = s.at[..., 1].set(h2.astype(states.dtype))
+        s = s.at[..., 2].set(term.astype(states.dtype))
+        s = s.at[..., 3].set(self._na_device(h2, d2).astype(states.dtype))
+        return s, term

@@ -1,0 +1,134 @@
+"""Device-evaluable environment / simulation twins.
+
+The fused K-superstep dispatch (repro.core.fused) keeps select → insert
+→ simulate → finalize → backup on device for K supersteps; that is only
+possible when the environment's transition function and the simulation
+backend's value function are expressible as jittable JAX ops that are
+**bit-identical** to their host twins — the whole executor matrix rests
+on exact equality, so "close enough in f32" is not good enough.
+
+Protocol (duck-typed, mirrors envs.vector.has_vector_env):
+
+  env.step_device(states, actions) -> (next_states, terminal)
+      Total function over [B, *state_shape] f32 states and [B] i32
+      actions (callers pass clamped actions for masked-off rows; the
+      results of those rows are discarded).  No rewards — rewards are
+      only consumed at move commits, which always happen on host.
+  env.num_actions_device(states) -> i32[B]
+  env.resolvable_device(states, actions) -> bool[B]   (optional)
+      True where the transition CAN be resolved on device.  Rows that
+      come back False force the fused loop to escape to the host
+      expansion path.  Absent means "always resolvable".
+  sim.evaluate_device(states) -> f32[B]
+      Values only; priors force the host path (expand_all pools never
+      enter the fused loop).
+
+The only nontrivial piece is 64-bit integer hashing under a 32-bit JAX
+build: ``hash24_device`` emulates the splitmix-style mix of
+envs.bandit_tree._hash on (hi, lo) uint32 pairs — wrap-around adds with
+explicit carry, 32x32→64 multiplies via 16-bit limbs — so it is
+bit-equal to the numpy uint64 twin with or without JAX_ENABLE_X64.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_MASK16 = 0xFFFF
+_MASK24 = 0xFFFFFF
+
+# splitmix64 constants of envs.bandit_tree._hash, split into (hi, lo)
+_C1_HI, _C1_LO = 0x9E3779B9, 0x7F4A7C15
+_C2_HI, _C2_LO = 0xBF58476D, 0x1CE4E5B9
+
+
+def _u32(x):
+    import jax.numpy as jnp
+
+    if isinstance(x, int):          # x32 rejects python ints >= 2^31
+        x = np.uint32(x)
+    return jnp.asarray(x).astype(jnp.uint32)
+
+
+def _add64(a, b):
+    """(hi, lo) + (hi, lo) mod 2^64 with explicit carry."""
+    hi_a, lo_a = a
+    hi_b, lo_b = b
+    lo = lo_a + lo_b                       # uint32 wraps mod 2^32
+    carry = (lo < lo_a).astype(lo.dtype)
+    return hi_a + hi_b + carry, lo
+
+
+def _shl64(a, k: int):
+    """(hi, lo) << k for a static 0 < k < 32."""
+    hi, lo = a
+    return (hi << k) | (lo >> (32 - k)), lo << k
+
+
+def _mul32x32(a, b):
+    """uint32 x uint32 -> full 64-bit product as (hi, lo), via 16-bit
+    limbs so no intermediate exceeds 32 bits."""
+    a0, a1 = a & _MASK16, a >> 16
+    b0, b1 = b & _MASK16, b >> 16
+    p00 = a0 * b0
+    p10 = a1 * b0
+    mid = a0 * b1 + (p00 >> 16) + (p10 & _MASK16)  # bounded by 2^32 - 1
+    lo = (mid << 16) | (p00 & _MASK16)
+    hi = a1 * b1 + (p10 >> 16) + (mid >> 16)
+    return hi, lo
+
+
+def _mul64(a, b):
+    """Low 64 bits of (hi, lo) * (hi, lo)."""
+    hi_a, lo_a = a
+    hi_b, lo_b = b
+    hi, lo = _mul32x32(lo_a, lo_b)
+    return hi + lo_a * hi_b + hi_a * lo_b, lo
+
+
+def hash24_device(h, a):
+    """Bit-exact device twin of envs.bandit_tree._hash / _hash_batch.
+
+    ``h`` and ``a`` are integer arrays whose values fit in uint32 (the
+    env guarantees 24-bit hashes and small action codes).  Returns i32
+    masked to 24 bits, equal element-for-element to the numpy uint64
+    version in both x32 and x64 JAX modes.
+    """
+    import jax.numpy as jnp
+
+    h = _u32(h)
+    a = _u32(a)
+    zero = jnp.zeros_like(h)
+    t = _add64(_add64((zero, a), (_u32(_C1_HI), _u32(_C1_LO))),
+               _shl64((zero, h), 6))
+    x = (t[0], h ^ t[1])
+    x = _mul64(x, (_u32(_C2_HI), _u32(_C2_LO)))
+    lo = x[1] ^ ((x[1] >> 31) | (x[0] << 1))   # (x ^= x >> 31), low word
+    return (lo & _u32(_MASK24)).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# capability probes (duck-typed, like envs.vector.has_vector_env)
+# ---------------------------------------------------------------------------
+
+def has_device_env(env) -> bool:
+    """True when the env can resolve expansions inside a fused dispatch."""
+    return (callable(getattr(env, "step_device", None))
+            and callable(getattr(env, "num_actions_device", None)))
+
+
+def has_device_sim(sim) -> bool:
+    """True when the backend has a jittable value leg (values only —
+    prior-producing backends keep the host path)."""
+    return callable(getattr(sim, "evaluate_device", None))
+
+
+def resolvable_device(env, states, actions):
+    """bool[B] — rows whose transition the device twin can resolve.
+    Envs without the hook are fully resolvable."""
+    import jax.numpy as jnp
+
+    hook = getattr(env, "resolvable_device", None)
+    if hook is None:
+        return jnp.ones(np.shape(actions), bool)
+    return hook(states, actions)

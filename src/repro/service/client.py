@@ -180,6 +180,7 @@ class SearchClient:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        supersteps_per_dispatch: int = 1,
         trace: Union[bool, Tracer] = False,
         metrics: Union[bool, MetricsRegistry] = False,
         trace_capacity: int = 1 << 16,
@@ -201,6 +202,7 @@ class SearchClient:
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
             expansion=expansion,
+            supersteps_per_dispatch=supersteps_per_dispatch,
             tracer=self.tracer, metrics=self.registry,
             result_ttl_ticks=result_ttl_ticks)
         self._handles: dict[int, SearchHandle] = {}

@@ -53,6 +53,7 @@ class ServiceFrontend:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        supersteps_per_dispatch: int = 1,
         policy: Union[str, SchedulePolicy] = "round-robin",
         retire_after_ticks: Optional[int] = None,
         tracer=None,
@@ -66,6 +67,7 @@ class ServiceFrontend:
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
             expansion=expansion,
+            supersteps_per_dispatch=supersteps_per_dispatch,
             trace=tracer if tracer is not None else False,
             metrics=metrics if metrics is not None else False)
         self.core = self.client.core

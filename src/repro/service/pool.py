@@ -199,6 +199,11 @@ class ServiceStats:
     session_scatters: int = 0    # sub -> arena write-backs (close/sync)
     session_reuses: int = 0      # supersteps served by an already-resident sub
     occupancy_sum: float = 0.0     # sum of per-superstep A/G (avg = /supersteps)
+    fused_dispatches: int = 0    # fused K-superstep device dispatches issued
+    fused_supersteps: int = 0    # supersteps that ran inside a fused dispatch
+    fused_ran_k: int = 0         # dispatches that ran their full K budget
+    fused_escape_commit: int = 0   # dispatches stopped at a move boundary
+    fused_escape_expand: int = 0   # dispatches escaped for host expansion
     t_intree: float = 0.0        # select + insert + finalize + backup
     t_host: float = 0.0          # ST / env expansion + scheduling bookkeeping
     t_expand: float = 0.0        # expansion-engine share of t_host
@@ -258,6 +263,7 @@ class ArenaPool:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        supersteps_per_dispatch: int = 1,
         expander: Optional[ExpansionEngine] = None,
         tracer=None,
         metrics=None,
@@ -352,6 +358,12 @@ class ArenaPool:
         # cold-pool retirement state (see retire())
         self.retired = False
         self.idle_ticks = 0
+        # fused K-superstep device dispatch (repro.core.fused): K > 1 runs
+        # up to K supersteps per device program when the executor, env and
+        # sim backend all have device legs (fused_capable); K = 1 keeps
+        # the phase-by-phase path — the oracle the fused path is
+        # differential-tested against.
+        self.supersteps_per_dispatch = max(1, int(supersteps_per_dispatch))
         # fixed per-slot finalize width (vmapped finalize needs one shape)
         self.K = p * cfg.Fp if cfg.expand_all else p
 
@@ -646,14 +658,44 @@ class ArenaPool:
         fin_pf = np.zeros((Ge, p, cfg.Fp), np.int32)
         sim_nodes = np.zeros((Ge, p), np.int32)
         vals = np.zeros((Ge, p), np.int32)
-        for i, (r, g) in enumerate(zip(rows, act_idx)):
-            row = slice(i * p, (i + 1) * p)
-            pr = priors[row] if priors is not None else None
-            (fin_nodes[r], fin_na[r], fin_term[r], fin_pp[r],
-             fin_pf[r]) = pend.hx[g].padded_finalize_args(self.K, p, cfg.Fp,
-                                                          pr)
-            sim_nodes[r] = pend.hx[g].sim_nodes
-            vals[r] = values_fx[row]
+        # batched scatter over all active slots at once (the per-slot
+        # padded_finalize_args loop, vectorized; bit-identity pinned by
+        # the executor matrix): ragged per-slot finalize entries land at
+        # (repeated row, dense prefix position)
+        hxs = [pend.hx[g] for g in act_idx]
+        rows_arr = np.asarray(rows, np.int64)
+        A = len(hxs)
+        sim_nodes[rows_arr] = np.stack([h.sim_nodes for h in hxs])
+        vals[rows_arr] = values_fx.reshape(A, p)
+        counts = np.fromiter((len(h.fin_nodes) for h in hxs), np.int64, A)
+        total = int(counts.sum())
+        if total:
+            rr = np.repeat(rows_arr, counts)
+            pos = np.arange(total) - np.repeat(np.cumsum(counts) - counts,
+                                               counts)
+            fin_nodes[rr, pos] = np.concatenate(
+                [h.fin_nodes for h in hxs if h.fin_nodes])
+            fin_na[rr, pos] = np.concatenate(
+                [h.fin_na for h in hxs if h.fin_na])
+            fin_term[rr, pos] = np.concatenate(
+                [h.fin_term for h in hxs if h.fin_term])
+        if priors is not None:
+            pw = np.fromiter((len(h.prior_workers) for h in hxs), np.int64,
+                             A)
+            tp = int(pw.sum())
+            if tp:
+                rr2 = np.repeat(rows_arr, pw)
+                pos2 = np.arange(tp) - np.repeat(np.cumsum(pw) - pw, pw)
+                fin_pp[rr2, pos2] = np.concatenate(
+                    [h.prior_parents for h in hxs if h.prior_parents])
+                # global prior row of slot i's worker w is i*p + w
+                gw = np.concatenate(
+                    [np.asarray(h.prior_workers, np.int64) + i * p
+                     for i, h in enumerate(hxs) if h.prior_workers])
+                pr = np.asarray(priors)[gw]
+                padded = np.zeros((tp, cfg.Fp), np.float32)
+                padded[:, : pr.shape[1]] = pr
+                fin_pf[rr2, pos2] = np.asarray(fx.encode(padded), np.int32)
         t4 = time.perf_counter()
 
         with self.trace.span("backup", cat="phase", tid=self._track,
@@ -694,6 +736,144 @@ class ArenaPool:
         t_sim = time.perf_counter() - t2
         self.finish_superstep(pend, values, priors, t_sim=t_sim)
         return True
+
+    # ---- fused K-superstep device dispatch (repro.core.fused) ----
+    def fused_capable(self) -> bool:
+        """True when this pool can run fused dispatches: a device
+        executor (reference keeps the phase-by-phase oracle), a
+        device-evaluable env twin, a device value backend, and no
+        expand-all priors (those force the host expansion path)."""
+        from repro.envs.device import has_device_env, has_device_sim
+
+        return (not self.cfg.expand_all
+                and self.exec is not None
+                and hasattr(self.exec, "run_supersteps")
+                and has_device_env(self.env)
+                and has_device_sim(self.sim))
+
+    def fused_dispatch(self, max_supersteps: Optional[int] = None) -> int:
+        """Run up to min(supersteps_per_dispatch, max_supersteps) BSP
+        supersteps in ONE compiled device program, escaping early at a
+        move-commit boundary or an expansion the device env twin cannot
+        resolve (that superstep is then completed through the ordinary
+        host path, so every escape stays on the K=1 oracle trajectory).
+        Falls back to a single phase-by-phase superstep when K <= 1 or
+        the pool is not fused-capable.  Returns the number of complete
+        supersteps executed (0 when no slot is occupied)."""
+        K = self.supersteps_per_dispatch
+        if max_supersteps is not None:
+            K = min(K, max(1, int(max_supersteps)))
+        if K <= 1 or not self.fused_capable():
+            return 1 if self.superstep() else 0
+        self.stats.ticks += 1
+        tok = self.trace.begin("fused-dispatch", cat="phase",
+                               tid=self._track, tick=self._now(), k=K)
+        self._admit()
+        self._m_queue.set(len(self.queue))
+        active = self._active()
+        self._m_active.set(int(active.sum()))
+        if not active.any():
+            self.trace.end(tok)
+            return 0
+        t0 = time.perf_counter()
+        ex, ex_active, rows, act_idx = self._pick_execution(active)
+        A, p = len(act_idx), self.p
+        Ge = ex.G
+        # per-row remaining move budgets + ONE upload of the dispatched
+        # rows' ST images; the buffer stays device-resident for the
+        # whole dispatch (fused supersteps cost zero H2D copies)
+        budget_left = np.zeros(Ge, np.int32)
+        states = np.zeros((Ge, self.cfg.X) + tuple(self.env.state_shape),
+                          self.env.state_dtype)
+        start_size = np.ones(Ge, np.int64)
+        for r, g in zip(rows, act_idx):
+            slot = self.slots[g]
+            budget_left[r] = slot.req.budget - slot.move_supersteps
+            states[r] = self.sts[g].data
+            start_size[r] = slot.prev_size
+        disp = ex.run_supersteps(ex_active, p, K, self.env, self.sim,
+                                 states, budget_left,
+                                 self.alternating_signs)
+        n = disp.n
+        t1 = time.perf_counter()
+        self.stats.fused_dispatches += 1
+        self.stats.fused_supersteps += n
+        expand = disp.escape == "expand"
+        if expand:
+            self.stats.fused_escape_expand += 1
+        elif disp.escape == "commit":
+            self.stats.fused_escape_commit += 1
+        else:
+            self.stats.fused_ran_k += 1
+        self.registry.counter(
+            "service_fused_dispatches_total",
+            "fused K-superstep device dispatches by escape reason",
+            bucket=bucket_label(self.cfg), escape=disp.escape).inc()
+        # pull device-resolved expansion states back into the host
+        # tables: node ids are allocated contiguously, so rows
+        # [size-at-dispatch-start, end) are exactly the entries the host
+        # is missing.  An expansion escape excludes the escaped
+        # superstep's insert (the host expansion path writes those).
+        for r, g in zip(rows, act_idx):
+            end = int(disp.size_pre[r] if expand else disp.sizes[r])
+            lo = int(start_size[r])
+            if end > lo:
+                self.sts[g].write(np.arange(lo, end),
+                                  disp.states[r, lo:end])
+        # accounting for the device-complete supersteps.  The LAST
+        # complete superstep of a normal exit goes through _commit_moves
+        # exactly like the K=1 path (so move commits / evictions /
+        # reroots replay bit-identically); an expansion escape instead
+        # hands its partial superstep to the host expansion path below.
+        carry = n if expand else n - 1
+        for r, g in zip(rows, act_idx):
+            slot = self.slots[g]
+            slot.move_supersteps += carry
+            slot.res.supersteps += carry
+            slot.prev_size = int(disp.size_pre[r])
+        self.stats.sim_rows += n * A * p
+        self.stats.sim_batches += n
+        self.stats.max_fused_rows = max(self.stats.max_fused_rows, A * p)
+        if n:
+            self._m_sim_rows.observe(A * p)
+        if ex is not self.exec:
+            # all n device-complete supersteps ran on the gathered sub-
+            # arena (an escaped superstep counts itself in finish_superstep)
+            self.stats.compacted_supersteps += n
+            if not expand and not self.persistent_compaction:
+                self._close_session()
+        if expand:
+            # complete the escaped superstep on host: the device already
+            # applied selection (virtual loss, node_O) and insertion, so
+            # the ordinary expand -> evaluate -> finish path picks up
+            # exactly where begin_superstep would have handed off
+            self.stats.supersteps += n
+            self.stats.occupancy_sum += n * A / self.G
+            self._m_supersteps.inc(n)
+            sel = disp.sel_host
+            hx = self.expander.expand(
+                [(g, self.sts[g], {k: v[r] for k, v in sel.items()},
+                  disp.new_nodes[r]) for r, g in zip(rows, act_idx)],
+                tid=self._track)
+            t2 = time.perf_counter()
+            self.stats.t_expand += t2 - t1
+            sim_states = np.concatenate([hx[g].sim_states for g in act_idx])
+            pend = _PendingStep(
+                ex=ex, ex_active=ex_active, rows=rows, act_idx=act_idx,
+                sel_dev=disp.sel_dev, hx=hx, sim_states=sim_states,
+                t_intree=t1 - t0, t_host=t2 - t1, tok=tok)
+            t3 = time.perf_counter()
+            values, priors = self.sim.evaluate(sim_states)
+            self.finish_superstep(pend, values, priors,
+                                  t_sim=time.perf_counter() - t3)
+            return n + 1
+        self.stats.supersteps += n
+        self.stats.occupancy_sum += n * A / self.G
+        self.stats.t_intree += t1 - t0
+        self._m_supersteps.inc(n)
+        self._commit_moves(act_idx)
+        self.trace.end(tok)
+        return n
 
     # ---- move boundary: commit / advance / evict ----
     def _commit_moves(self, act_idx):
@@ -777,7 +957,10 @@ class ArenaPool:
     def run(self, max_supersteps: int = 100_000) -> list[SearchResult]:
         while (self.queue or self._active().any()) \
                 and self.stats.supersteps < max_supersteps:
-            if not self.superstep():
+            if self.supersteps_per_dispatch > 1:
+                if self.fused_dispatch() == 0:
+                    break
+            elif not self.superstep():
                 break
         return self.completed
 

@@ -133,16 +133,26 @@ class WeightedQueueDepthPolicy(SchedulePolicy):
     1.0 recovers the unsmoothed behavior.  A bucket's EWMA is seeded
     with its first observed depth, so the first tick a bucket has work
     behaves exactly as before smoothing existed.  The smoothed load is
-    exported per bucket as the `service_smoothed_load` gauge."""
+    exported per bucket as the `service_smoothed_load` gauge.
+
+    ``fairness_floor`` hardens the "every bucket keeps at least 1"
+    guarantee into at least one ADMISSION: a share-of-backlog cap of 1
+    is satisfied by a bucket's single long-running active request, so
+    its queued requests could starve behind a bucket that dominates the
+    depth share.  With the floor on, any bucket with queued work gets a
+    cap of at least ``min(G, load + 1)`` — room for one fresh admission
+    per gang tick, regardless of share."""
 
     name = "weighted-queue-depth"
     gang = True
 
-    def __init__(self, ewma_alpha: float = 0.5):
+    def __init__(self, ewma_alpha: float = 0.5,
+                 fairness_floor: bool = True):
         if not 0.0 < ewma_alpha <= 1.0:
             raise ValueError(
                 f"ewma_alpha must be in (0, 1]: {ewma_alpha}")
         self.ewma_alpha = ewma_alpha
+        self.fairness_floor = fairness_floor
         self._ewma: dict = {}
         self._last_tick = None
 
@@ -176,9 +186,15 @@ class WeightedQueueDepthPolicy(SchedulePolicy):
         total = sum(depths.values())
         if total == 0:
             return {}
-        return {k: max(1, min(core.pools[k].G,
+        caps = {k: max(1, min(core.pools[k].G,
                               math.ceil(core.pools[k].G * d / total)))
                 for k, d in depths.items()}
+        if self.fairness_floor:
+            for k in caps:
+                pool = core.pools[k]
+                if pool.queue:
+                    caps[k] = max(caps[k], min(pool.G, pool.load() + 1))
+        return caps
 
 
 class DeadlineAwarePolicy(SchedulePolicy):
@@ -249,6 +265,7 @@ class SchedulerCore:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        supersteps_per_dispatch: int = 1,
         tracer=None,
         metrics=None,
         result_ttl_ticks: Optional[int] = None,
@@ -284,12 +301,18 @@ class SchedulerCore:
         self.fuse = self.policy.gang if fuse_across_pools is None \
             else fuse_across_pools
         self.retire_after_ticks = retire_after_ticks
+        # fused K-superstep device dispatch (repro.core.fused): pools
+        # whose env/sim carry device twins run up to K supersteps per
+        # tick in ONE compiled program; host-bound pools keep the
+        # phase-by-phase cadence on the same clock
+        self.supersteps_per_dispatch = max(1, int(supersteps_per_dispatch))
         self._pool_kw = dict(
             alternating_signs=alternating_signs,
             reuse_subtree=reuse_subtree,
             compact_threshold=compact_threshold,
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
+            supersteps_per_dispatch=supersteps_per_dispatch,
         )
         # ONE host-expansion engine (and process pool, in "pool" mode)
         # shared by every bucket
@@ -378,6 +401,16 @@ class SchedulerCore:
         for _, uid, key in due:
             self.cancel(uid, key, reason="deadline")
 
+    def _fused_cap(self) -> Optional[int]:
+        """Superstep cap for fused dispatches this tick: never run past
+        the most urgent outstanding deadline, so deadline eviction keeps
+        its per-tick granularity (the clock advances by the largest
+        fused run, and the cap guarantees that advance stops at the
+        nearest deadline).  None = no deadline pending, run the full K."""
+        if not self._deadlines:
+            return None
+        return max(1, min(t for t, _, _ in self._deadlines) - self.ticks)
+
     # ---- the global tick ----
     def tick(self) -> bool:
         """One scheduler tick: expire deadlines, apply the policy's
@@ -394,24 +427,43 @@ class SchedulerCore:
             pool.admit_limit = limits.get(key)
             pool.deadline_first = self.policy.deadline_first
         pending = []
+        fused_ns = []            # supersteps each fused pool ran this tick
+        advanced_ids: set = set()
+        cap = self._fused_cap()
         for key in self.policy.order(self):
             pool = self.pools[key]
             if pool.retired or not pool.has_work():
                 continue
-            pend = pool.begin_superstep()
-            if pend is None:
-                continue
-            pending.append((pool, pend))
+            if self.supersteps_per_dispatch > 1 and pool.fused_capable():
+                # fused K-superstep device dispatch: admission,
+                # simulation and move commits all happen inside; the
+                # deadline cap keeps eviction granularity intact
+                n = pool.fused_dispatch(max_supersteps=cap)
+                if n == 0:
+                    continue
+                fused_ns.append(n)
+                advanced_ids.add(id(pool))
+            else:
+                pend = pool.begin_superstep()
+                if pend is None:
+                    continue
+                pending.append((pool, pend))
+                advanced_ids.add(id(pool))
             self.last_key = key
             self.policy.advanced(self, key)
             if not self.policy.gang:
                 break
         if pending:
             self._evaluate_and_finish(pending)
-        self._sweep_retirement(advanced={id(pool) for pool, _ in pending})
+        if fused_ns:
+            # the global clock counts supersteps of service time: a tick
+            # whose deepest fused dispatch ran n supersteps advances the
+            # clock by n (the +1 at tick entry already paid the first)
+            self.ticks += max(fused_ns) - 1
+        self._sweep_retirement(advanced=advanced_ids)
         if tok is not None:
             self.trace.end(tok)
-        return bool(pending)
+        return bool(pending) or bool(fused_ns)
 
     def _evaluate_and_finish(self, pending):
         """ONE SimulationBackend.evaluate spanning every advancing pool

@@ -317,6 +317,35 @@ def test_weighted_policy_sizes_buckets_by_queue_depth():
     cl.close()
 
 
+def test_fairness_floor_prevents_admission_starvation():
+    """Regression: a share-of-backlog cap of 1 is satisfied by a
+    bucket's single long-running ACTIVE request, so its queued work used
+    to starve behind a dominating bucket until that request finished.
+    The fairness floor guarantees room for one fresh admission per gang
+    tick; fairness_floor=False reproduces the starvation."""
+    from repro.service.scheduler_core import WeightedQueueDepthPolicy
+
+    def go(floor):
+        cl = _client(G=4, policy=WeightedQueueDepthPolicy(
+            fairness_floor=floor))
+        # bucket B: one long-running request holds its only fair-share
+        # slot, one small request queues behind it
+        b1 = cl.submit(SearchRequest(uid=100, seed=1, budget=60, cfg=CFG_B))
+        # bucket A dominates the depth share (cap_B stays at the floor)
+        for i in range(12):
+            cl.submit(SearchRequest(uid=i, seed=i, budget=20, cfg=CFG_A))
+        b2 = cl.submit(SearchRequest(uid=101, seed=2, budget=2, cfg=CFG_B))
+        cl.poll(6)
+        b2_admitted = b2.status() != "queued"
+        assert b1.status() == "active"    # B1 still occupies its slot
+        assert len(cl.drain()) == 14      # floor or not, nothing is lost
+        cl.close()
+        return b2_admitted
+
+    assert go(True)        # B2 admitted alongside B1 within a few ticks
+    assert not go(False)   # starved behind B1 at the old share cap
+
+
 def test_deadline_aware_policy_prefers_urgent_bucket():
     """The pool holding the nearest deadline advances first on every
     tick, so an urgent request on a cold bucket overtakes a deep default

@@ -302,6 +302,83 @@ def test_expand_all_vector_matches_loop():
     _assert_identical(go("vector"), go("loop"), "expand-all vector")
 
 
+# ---------------------------------------------------------------------------
+# fused K-superstep device dispatch (repro.core.fused)
+# ---------------------------------------------------------------------------
+
+# executors with a fused run_supersteps leg (reference keeps the
+# phase-by-phase oracle on purpose)
+FUSED_EXECUTORS = ("faithful", "pallas")
+
+
+@pytest.mark.parametrize("executor", FUSED_EXECUTORS)
+@pytest.mark.parametrize("k", [1, 4], ids=["k1", "k4"])
+@pytest.mark.parametrize("compact", [0.0, 0.7], ids=["masked", "compacted"])
+def test_fused_dispatch_matches_oracle(executor, k, compact):
+    """Acceptance: the fused K-superstep device dispatch is grouping-
+    independent — the matrix schedule with supersteps_per_dispatch=K
+    equals the sequential numpy oracle per slot, bit for bit, on every
+    fused-capable executor, masked and compacted.  K=1 keeps the classic
+    phase-by-phase path (the degenerate case must not regress); K=4
+    must actually run fused dispatches and hit the move-commit escape
+    (the schedule's budgets are all < 2K)."""
+    svc = SearchService(CFG, ENV, BanditValueBackend(), G=G, p=P,
+                        executor=executor, compact_threshold=compact,
+                        supersteps_per_dispatch=k)
+    try:
+        for kw in _SCHEDULE:
+            svc.submit(SearchRequest(**kw))
+        done = {r.uid: r for r in svc.run()}
+        stats = svc.stats
+    finally:
+        svc.close()
+    _assert_identical((done, stats.supersteps), _run(*ORACLE),
+                      f"fused/{executor}/K={k}")
+    if k > 1:
+        assert stats.fused_dispatches > 0
+        assert stats.fused_supersteps > 0
+        assert stats.fused_escape_commit > 0      # commit edge exercised
+        if compact > 0.0:
+            assert stats.compacted_supersteps > 0  # fused on the sub-arena
+    else:
+        assert stats.fused_dispatches == 0        # K=1 is the classic path
+
+
+class _PartialDeviceEnv(BanditTreeEnv):
+    """Device twin that refuses transitions from depth >= 2 leaves: every
+    deeper expansion forces the fused loop's post-insert escape to the
+    host ExpansionEngine path."""
+
+    def resolvable_device(self, states, actions):
+        return states[..., 0] < 2
+
+
+@pytest.mark.parametrize("executor", FUSED_EXECUTORS)
+def test_fused_dispatch_expansion_escape_matches_oracle(executor):
+    """Acceptance: the escape-at-expansion edge — a superstep whose
+    expansion the device env twin cannot resolve exits the loop post-
+    insert and completes through the ordinary host expansion path,
+    still bit-identical to the oracle on the same env."""
+    env = _PartialDeviceEnv(fanout=4, terminal_depth=10)
+
+    def go(executor, k):
+        svc = SearchService(CFG, env, BanditValueBackend(), G=G, p=P,
+                            executor=executor, supersteps_per_dispatch=k)
+        try:
+            for kw in _SCHEDULE:
+                svc.submit(SearchRequest(**kw))
+            done = {r.uid: r for r in svc.run()}
+            stats = svc.stats
+        finally:
+            svc.close()
+        return (done, stats.supersteps), stats
+
+    got, stats = go(executor, 4)
+    want, _ = go("reference", 1)
+    assert stats.fused_escape_expand > 0          # the edge really fired
+    _assert_identical(got, want, f"fused-escape/{executor}")
+
+
 def test_new_executors_must_enroll():
     """Guard: the matrix derives from EXECUTOR_NAMES, so this only fires
     if someone renames the constant away — the auto-enrolment contract."""
