@@ -43,6 +43,14 @@ runs up to K supersteps per compiled lax.while_loop program instead of
 returning to Python between every phase — the speedup_vs_k1 field is
 the ROADMAP item 2 acceptance gate.
 
+service_shard_D<d>_G<g> rows sweep the D-sharded arena (core/sharded.py):
+the same full-occupancy refill workload at fixed G with the slots
+partitioned across D per-device shard arenas (least-loaded placement,
+per-shard fused dispatches), recording searches/sec and speedup_vs_d1.
+Run under XLA_FLAGS=--xla_force_host_platform_device_count=4 to give
+each shard its own device; on a 1-device host the map wraps and the rows
+measure the partition overhead alone.
+
 service_obs_overhead_G<g> pins the observability layer's cost: the same
 weighted-queue-depth heterogeneous workload with tracing + metrics
 enabled vs off (enabled wall overhead must stay < 5%), plus a direct
@@ -278,6 +286,49 @@ def _dispatch_k_rows(executors, G, p, budget, X, ks, reps: int = 3):
                 f"speedup_vs_k1={base_us / max(us, 1e-9):.2f}x")
 
 
+def _shard_rows(G, p, budget, X, ds, reps: int = 3):
+    """D-sharded serving: the refill workload at fixed G, swept over the
+    shard count.  Each D partitions the same G slots into D per-device
+    arenas (committed via launch.mesh.serving_devices — wraps on hosts
+    with fewer devices), admission goes least-loaded, and fused
+    dispatches run one compiled program per shard.  speedup_vs_d1 is the
+    cross-device scaling signal; results are bit-identical at any D, so
+    the row only moves wall clock."""
+    env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    sim = BanditValueBackend()       # one instance: fused cache by identity
+    cfg = TreeConfig(X=X, F=6, D=8)
+    n = 2 * G
+    base_sps = None
+    for D in ds:
+        def build():
+            cl = SearchClient(env, sim, G=G, p=p, executor="faithful",
+                              default_cfg=cfg, n_shards=D,
+                              supersteps_per_dispatch=4)
+            for i in range(n):
+                cl.submit(SearchRequest(uid=i, seed=i, budget=budget))
+            return cl
+        build().drain()              # warmup (per-shard-count programs)
+        wall = float("inf")
+        for _ in range(reps):
+            cl = build()
+            t0 = time.perf_counter()
+            done = cl.drain()
+            wall = min(wall, time.perf_counter() - t0)
+            s = cl.stats
+            cl.close()
+        assert len(done) == n
+        sps = n / wall
+        if base_sps is None:
+            base_sps = sps
+        csv_line(
+            f"service_shard_D{D}_G{G}",
+            wall / max(s.supersteps, 1) * 1e6,
+            f"searches_per_sec={sps:.2f} shards={D} "
+            f"supersteps={s.supersteps} "
+            f"fused_dispatches={s.fused_dispatches} "
+            f"speedup_vs_d1={sps / max(base_sps, 1e-9):.2f}x")
+
+
 def _obs_rows(G, p, budget, X, reps: int = 3):
     """Observability overhead, two gates:
 
@@ -397,6 +448,12 @@ def run(smoke: bool = False):
                      budget=4 if smoke else budget,
                      X=X if smoke else 128,
                      ks=(1, 4) if smoke else (1, 2, 4, 8))
+
+    # D-sharded serving: searches/sec vs shard count at fixed G (under
+    # XLA_FLAGS=--xla_force_host_platform_device_count=4 each shard gets
+    # its own device; a 1-device host still measures partition overhead)
+    _shard_rows(4 if smoke else 16, p, budget=4 if smoke else budget,
+                X=X if smoke else 128, ds=(1, 2) if smoke else (1, 2, 4))
 
     # observability overhead: tracing+metrics enabled vs off, plus the
     # disabled no-op path measured directly (the CI-gated ~0% claim)

@@ -78,6 +78,7 @@ def run_client(args):
         policy=args.policy, retire_after_ticks=args.retire_after,
         compact_threshold=0.5, compact_exit_threshold=0.75,
         supersteps_per_dispatch=args.supersteps_per_dispatch,
+        n_shards=args.shards,
         trace=bool(args.trace_out), metrics=args.metrics,
     )
     handles = [client.submit(SearchRequest(
@@ -205,6 +206,12 @@ def main():
                          "needs device-evaluable env + sim twins (the "
                          "bandit env here has them; host-only backends "
                          "silently keep the K=1 phase-by-phase path)")
+    ap.add_argument("--shards", type=int, default=1, metavar="D",
+                    help="client mode: partition each bucket's G slots "
+                         "across D per-device shard arenas (least-loaded "
+                         "placement; results bit-identical to D=1).  Use "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count"
+                         "=D for real per-shard devices on a CPU host")
     ap.add_argument("--retire-after", type=int, default=12, metavar="TICKS",
                     help="client mode: idle ticks before a cold pool "
                          "releases its arena (resurrected on demand)")

@@ -207,10 +207,18 @@ def _sel_to_host(sel) -> dict:
 
 
 class JaxExecutor:
-    """Vmapped jit in-tree operations over G stacked trees."""
+    """Vmapped jit in-tree operations over G stacked trees.
+
+    `device` commits the arena to one specific device (multi-device
+    serving: core/sharded.py builds one executor per shard).  Every op —
+    eager and jit — then follows the committed placement, and the host
+    uploads (active masks, finalize rows, sim states) stay uncommitted
+    so XLA moves them to the arena's device automatically.  None keeps
+    the historical default-device placement.
+    """
 
     def __init__(self, cfg: TreeConfig, G: int, variant: str = "faithful",
-                 _trees: Optional[UCTree] = None):
+                 _trees: Optional[UCTree] = None, device=None):
         if variant not in ("faithful", "relaxed", "wavefront"):
             raise NotImplementedError(
                 f"JaxExecutor variant {variant!r}: the vmappable jit paths "
@@ -218,7 +226,11 @@ class JaxExecutor:
                 "kernels are PallasExecutor / executor='pallas')")
         self.cfg, self.G, self.variant = cfg, G, variant
         self._fused_variant = variant
+        self.device = device
         self.trees = init_arena(cfg, G) if _trees is None else _trees
+        if device is not None and _trees is None:
+            from repro.models.sharding import put_on_device
+            self.trees = put_on_device(self.trees, device)
 
     # -- device phases -------------------------------------------------
     def selection(self, active: np.ndarray, p: int):
@@ -298,7 +310,10 @@ class JaxExecutor:
 
     # -- compaction (gather active slots into a dense sub-arena) -------
     def _spawn(self, trees: UCTree, Gc: int) -> "JaxExecutor":
-        return JaxExecutor(self.cfg, Gc, self.variant, _trees=trees)
+        # gathered trees inherit the parent's committed placement, so the
+        # sub-executor records the same device without a fresh device_put
+        return JaxExecutor(self.cfg, Gc, self.variant, _trees=trees,
+                           device=self.device)
 
     def gather_sub(self, slot_idx: np.ndarray, Gc: int) -> "JaxExecutor":
         idx = np.asarray(slot_idx, np.int32)
@@ -346,8 +361,8 @@ class PallasExecutor(JaxExecutor):
     """
 
     def __init__(self, cfg: TreeConfig, G: int,
-                 _trees: Optional[UCTree] = None):
-        super().__init__(cfg, G, "faithful", _trees=_trees)
+                 _trees: Optional[UCTree] = None, device=None):
+        super().__init__(cfg, G, "faithful", _trees=_trees, device=device)
         self._fused_variant = "pallas"
         from repro.kernels import ops as kops  # lazy: keeps core import-light
         self._kops = kops
@@ -368,7 +383,7 @@ class PallasExecutor(JaxExecutor):
         # no fence — same async-dispatch contract as JaxExecutor.backup
 
     def _spawn(self, trees: UCTree, Gc: int) -> "PallasExecutor":
-        return PallasExecutor(self.cfg, Gc, _trees=trees)
+        return PallasExecutor(self.cfg, Gc, _trees=trees, device=self.device)
 
 
 class ReferenceExecutor:
@@ -495,10 +510,22 @@ class ReferenceExecutor:
         return ref.best_root_action(self.cfg, tree)
 
 
-def make_intree_executor(cfg: TreeConfig, G: int, name: str) -> InTreeExecutor:
-    """Executor factory shared by TreeParallelMCTS (G=1) and SearchService."""
+def make_intree_executor(cfg: TreeConfig, G: int, name: str,
+                         n_shards: int = 1,
+                         devices: Optional[list] = None) -> InTreeExecutor:
+    """Executor factory shared by TreeParallelMCTS (G=1) and the service
+    pools.  `n_shards > 1` partitions the G slots across D per-device
+    child executors behind one ShardedExecutor (core/sharded.py): slot g
+    lives on shard g // (G // D), each shard's arena committed to its own
+    device (`devices`, defaulting to launch.mesh.serving_devices).  The
+    per-slot computation is position- and device-independent, so sharding
+    never changes what a slot computes."""
+    if n_shards > 1:
+        from repro.core.sharded import make_sharded_executor
+        return make_sharded_executor(cfg, G, name, n_shards, devices)
+    device = devices[0] if devices else None
     if name == "reference":
         return ReferenceExecutor(cfg, G)
     if name == "pallas":
-        return PallasExecutor(cfg, G)
-    return JaxExecutor(cfg, G, name)
+        return PallasExecutor(cfg, G, device=device)
+    return JaxExecutor(cfg, G, name, device=device)

@@ -38,6 +38,15 @@ host path) and device twins on both env and sim backend (probes in
 repro.envs.device).  The program is cached per
 (cfg, variant, p, K, env, sim, alternating) — env/sim participate by
 identity, so hold onto the same objects across dispatches.
+
+Multi-device serving (core/sharded.py): the program itself is
+placement-agnostic — jit dispatch follows the COMMITTED device of the
+arena operand, so an executor whose trees were placed with
+models.sharding.put_on_device runs its fused program on that device
+with no code here changing.  The one cached program (per static key)
+specializes per input sharding, which is how D shards share a compile
+while each runs device-locally; ArenaPool.fused_dispatch drives one
+call per shard.
 """
 
 from __future__ import annotations

@@ -23,3 +23,18 @@ def make_host_mesh(shape=None, axes=("data", "model")):
     if shape is None:
         shape = (1, n)
     return jax.make_mesh(shape, axes)
+
+
+def serving_devices(n_shards: int) -> list:
+    """Device assignment for the D-sharded serving arena (service/pool.py):
+    shard d lives on ``jax.devices()[d % len(devices)]``.
+
+    With fewer physical devices than shards the assignment wraps — the
+    scheduler's D-way slot partition and placement logic are exercised
+    either way, and on a multi-device host (or under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` in CI) each
+    shard lands on its own device.  A FUNCTION for the same reason as the
+    mesh builders: importing this module must never touch device state.
+    """
+    devs = jax.devices()
+    return [devs[d % len(devs)] for d in range(max(1, int(n_shards)))]

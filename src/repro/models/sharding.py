@@ -150,3 +150,16 @@ def constrain(x, logical_axes):
         return x
     spec = spec_for_act(mesh, rules, logical_axes, x.shape)
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def put_on_device(tree, device):
+    """Commit a pytree of arrays to ONE device (explicit per-device
+    placement, the serving-arena counterpart of the logical-axis rules
+    above).  The D-sharded executor (core/sharded.py) places each shard's
+    arena with this; every later op on the shard — jit dispatch included
+    — follows the committed placement, so uncommitted host uploads never
+    drag a shard back to the default device.  None = leave uncommitted
+    (single-device serving keeps its historical placement)."""
+    if device is None:
+        return tree
+    return jax.device_put(tree, device)

@@ -82,9 +82,10 @@ class SearchHandle:
         if self.uid in self._client.core.expired_uids:
             return "expired"
         pool = self._client.core.pools.get(self._key)
-        if pool is not None and any(
-                s is not None and s.req.uid == self.uid
-                for s in pool.slots):
+        # holds() is retired-safe: a retired pool's slot list is released
+        # with its arena, so probing pool.slots directly here would read
+        # freed state on a pool awaiting resurrection
+        if pool is not None and pool.holds(self.uid):
             return "active"
         return "queued"
 
@@ -94,13 +95,16 @@ class SearchHandle:
         """The request's SearchResult.  With wait=True the client is
         polled until the result exists; raises RuntimeError if the
         scheduler drains without producing it (never happens for a
-        submitted uid unless max_ticks is exhausted)."""
+        submitted uid unless max_ticks is exhausted).  `max_ticks`
+        bounds the CLOCK, not poll() calls: one fused dispatch advances
+        `core.ticks` by up to K per call, so counting calls would let a
+        fused run burn K times the stated budget."""
         core = self._client.core
-        ticks = 0
-        while wait and self.uid not in core.results and ticks < max_ticks:
+        start = core.ticks
+        while (wait and self.uid not in core.results
+               and core.ticks - start < max_ticks):
             if not self._client.poll(1):
                 break
-            ticks += 1
         res = core.results.get(self.uid)
         if res is None:
             if self.uid in core.expired_uids:
@@ -130,12 +134,19 @@ class SearchHandle:
         core = self._client.core
         emitted = 0
         live = True
+        log = None
         while live:
             # a final flush still runs after done()/drain ends the loop
             live = not self.done() and self._client.poll(1) > 0
-            log = core.move_log.get(self.uid, ())
-            while emitted < len(log):
-                yield log[emitted]
+            # hold the FIRST list object resolved for this uid: the pool
+            # listener appends to it in place, while the retired-pool
+            # result TTL may pop the dict entry mid-iteration — re-fetching
+            # would then silently truncate the tail of the stream
+            if log is None:
+                log = core.move_log.get(self.uid)
+            cur = () if log is None else log
+            while emitted < len(cur):
+                yield cur[emitted]
                 emitted += 1
 
 
@@ -161,6 +172,13 @@ class SearchClient:
     ticks (their handles report status "expired").  All three are off by
     default; traced runs are bit-identical to untraced ones
     (tests/test_executor_matrix.py).
+
+    Multi-device serving: `n_shards=D` partitions every bucket's G slots
+    into D per-device shard arenas (G must be a multiple of D); each
+    admission lands on the least-loaded shard and runs device-locally,
+    while results stay bit-identical to n_shards=1 for every request.
+    `shard_devices` pins the shard→device map (default:
+    launch.mesh.serving_devices, round-robin over jax.devices()).
     """
 
     def __init__(
@@ -185,6 +203,8 @@ class SearchClient:
         metrics: Union[bool, MetricsRegistry] = False,
         trace_capacity: int = 1 << 16,
         result_ttl_ticks: Optional[int] = None,
+        n_shards: int = 1,
+        shard_devices: Optional[list] = None,
     ):
         self.tracer: Optional[Tracer] = (
             trace if isinstance(trace, Tracer)
@@ -204,7 +224,8 @@ class SearchClient:
             expansion=expansion,
             supersteps_per_dispatch=supersteps_per_dispatch,
             tracer=self.tracer, metrics=self.registry,
-            result_ttl_ticks=result_ttl_ticks)
+            result_ttl_ticks=result_ttl_ticks,
+            n_shards=n_shards, shard_devices=shard_devices)
         self._handles: dict[int, SearchHandle] = {}
 
     # ---- submission ----
@@ -242,12 +263,14 @@ class SearchClient:
     def run_until(self, pred: Callable[["SearchClient"], bool],
                   max_ticks: int = 100_000) -> bool:
         """Tick until `pred(client)` holds (True) or the scheduler drains
-        / max_ticks pass without it (returns pred's final value)."""
-        ticks = 0
+        / max_ticks pass without it (returns pred's final value).  Like
+        result(), the bound is against the clock — fused dispatches
+        advance it by up to K per tick() call."""
+        start = self.core.ticks
         while not pred(self):
-            if ticks >= max_ticks or not self.core.tick():
+            if (self.core.ticks - start >= max_ticks
+                    or not self.core.tick()):
                 return bool(pred(self))
-            ticks += 1
         return True
 
     def drain(self, max_ticks: int = 100_000) -> list[SearchResult]:

@@ -58,6 +58,8 @@ class ServiceFrontend:
         retire_after_ticks: Optional[int] = None,
         tracer=None,
         metrics=None,
+        n_shards: int = 1,
+        shard_devices: Optional[list] = None,
     ):
         self.client = SearchClient(
             env, sim, G=G, p=p, executor=executor, default_cfg=default_cfg,
@@ -69,7 +71,8 @@ class ServiceFrontend:
             expansion=expansion,
             supersteps_per_dispatch=supersteps_per_dispatch,
             trace=tracer if tracer is not None else False,
-            metrics=metrics if metrics is not None else False)
+            metrics=metrics if metrics is not None else False,
+            n_shards=n_shards, shard_devices=shard_devices)
         self.core = self.client.core
 
     # ---- historical attribute surface (delegated) ----

@@ -67,6 +67,23 @@ is occupied — completed results and counters survive, tree state has
 nothing live to lose.  The scheduler core drives this off an
 idle-superstep TTL (the ROADMAP "bucket arenas are never retired" item).
 
+Multi-device serving (D x G_shard): `n_shards=D` partitions the G slots
+into D contiguous runs of G_shard = G // D, one per-device child arena
+each (core/sharded.py — shard d's executor is committed to
+launch.mesh.serving_devices(D)[d]).  Placement policy: admission fills
+the LEAST-LOADED enabled shard first (ties break toward the lowest
+shard id, then the lowest free slot — so D=1 reduces exactly to the
+historical lowest-free-slot order), which keeps the per-device batch
+shapes balanced as requests come and go; `set_shard_enabled(d, False)`
+drains a shard for failover — live requests finish, new admissions
+route around it.  The superstep body is unchanged: the sharded executor
+fans every phase out per device and reassembles, host expansion and the
+(cross-pool fused) Simulation batch still span all shards, and fused
+K-dispatches run per shard, each to its own escape
+(`fused_dispatch`).  Placement is scheduling, not semantics: per-request
+results are bit-identical to the single-device pool at any D
+(tests/test_executor_matrix.py sharded legs).
+
 Determinism: with a deterministic SimulationBackend the per-slot tree
 evolution is bit-identical to a single-tree TreeParallelMCTS run of the
 same request (tests/test_service.py) — scheduling changes WHEN a tree's
@@ -177,6 +194,10 @@ class _PendingStep:
     t_intree: float = 0.0        # begin-side wall, folded into the pool's
     t_host: float = 0.0          # timing stats at finish time
     tok: object = None           # open "superstep" span (obs.trace)
+    compacted: Optional[bool] = None  # ran on a session sub-arena?  None =
+    #                              infer from `ex is not pool.exec` (the
+    #                              sharded fused path sets it explicitly:
+    #                              its `ex` is a shard child, not a sub)
 
 
 @dataclasses.dataclass
@@ -267,6 +288,8 @@ class ArenaPool:
         expander: Optional[ExpansionEngine] = None,
         tracer=None,
         metrics=None,
+        n_shards: int = 1,
+        shard_devices: Optional[list] = None,
     ):
         self.cfg, self.env, self.sim = cfg, env, sim
         self.G, self.p = G, p
@@ -336,7 +359,19 @@ class ArenaPool:
         # (scatter only on membership change / snapshot read); False
         # restores the per-superstep gather/scatter for comparison
         self.persistent_compaction = persistent_compaction
-        self.exec = make_intree_executor(cfg, G, executor)
+        # multi-device serving: D per-device shard runs of G_shard slots
+        # each (module docstring, "Multi-device serving").  D=1 is the
+        # historical single-arena pool, bit for bit.
+        self.n_shards = max(1, int(n_shards))
+        if G % self.n_shards:
+            raise ValueError(
+                f"G={G} must be a multiple of n_shards={self.n_shards}")
+        self.shard_G = G // self.n_shards
+        self.shard_devices = shard_devices
+        self._shard_enabled = [True] * self.n_shards
+        self.exec = make_intree_executor(cfg, G, executor,
+                                         n_shards=self.n_shards,
+                                         devices=shard_devices)
         self.sts = [StateTable(cfg.X, env.state_shape, env.state_dtype)
                     for _ in range(G)]
         self.slots: list[Optional[_Slot]] = [None] * G
@@ -400,39 +435,75 @@ class ArenaPool:
                    else float("-inf"))
         return (req.priority, urgency, -i)
 
+    def shard_of(self, g: int) -> int:
+        """Owning shard of slot g (contiguous D-way partition)."""
+        return int(g) // self.shard_G
+
+    def shard_loads(self) -> list:
+        """Occupied-slot count per shard — the placement signal."""
+        loads = [0] * self.n_shards
+        for g, s in enumerate(self.slots):
+            if s is not None:
+                loads[g // self.shard_G] += 1
+        return loads
+
+    def set_shard_enabled(self, shard: int, enabled: bool = True):
+        """Failover lever: a disabled shard accepts no NEW admissions
+        (its live requests run to completion) — placement routes around
+        it until it is re-enabled."""
+        self._shard_enabled[int(shard)] = bool(enabled)
+
+    def _place_slot(self) -> Optional[int]:
+        """Cross-device placement: the lowest free slot of the
+        least-loaded ENABLED shard (ties: lowest shard id).  With D=1
+        this is exactly the historical lowest-free-slot order."""
+        loads = self.shard_loads()
+        best = None
+        for d in range(self.n_shards):
+            if not self._shard_enabled[d]:
+                continue
+            lo = d * self.shard_G
+            free = next((g for g in range(lo, lo + self.shard_G)
+                         if self.slots[g] is None), None)
+            if free is None:
+                continue
+            if best is None or loads[d] < loads[best[0]]:
+                best = (d, free)
+        return None if best is None else best[1]
+
     def _admit(self):
         limit = self.G if self.admit_limit is None \
             else max(0, min(self.admit_limit, self.G))
         active = sum(s is not None for s in self.slots)
-        for g in range(self.G):
-            if self.slots[g] is not None:
-                continue
-            while self.queue and active < limit:
-                i = max(range(len(self.queue)),
-                        key=lambda j: self._admit_rank(self.queue[j], j))
-                req = self.queue.pop(i)
-                res = SearchResult(uid=req.uid, submitted_at=req.submitted_at)
-                s0 = self.env.initial_state(req.seed)
-                na = self.env.num_actions(s0)
-                if na == 0:  # degenerate: nothing to search
-                    res.terminal = True
-                    self._finish(res)
-                    continue
-                self.exec.reset_slot(g, na)
-                self.sts[g].flush(s0)
-                self.slots[g] = _Slot(req=req, res=res, root_state=s0,
-                                      cfg=req.cfg if req.cfg is not None
-                                      else self.cfg)
-                self.stats.admitted += 1
-                wait = max(0, self._now() - max(req.submit_tick, 0))
-                self.stats.wait_supersteps[wait] = (
-                    self.stats.wait_supersteps.get(wait, 0) + 1)
-                self._m_admitted.inc()
-                self._m_wait.observe(wait)
-                self.trace.instant("admit", cat="request", tid=self._track,
-                                   uid=req.uid, slot=g, wait=wait)
-                active += 1
+        while self.queue and active < limit:
+            g = self._place_slot()
+            if g is None:   # every enabled shard is full
                 break
+            i = max(range(len(self.queue)),
+                    key=lambda j: self._admit_rank(self.queue[j], j))
+            req = self.queue.pop(i)
+            res = SearchResult(uid=req.uid, submitted_at=req.submitted_at)
+            s0 = self.env.initial_state(req.seed)
+            na = self.env.num_actions(s0)
+            if na == 0:  # degenerate: nothing to search, slot stays free
+                res.terminal = True
+                self._finish(res)
+                continue
+            self.exec.reset_slot(g, na)
+            self.sts[g].flush(s0)
+            self.slots[g] = _Slot(req=req, res=res, root_state=s0,
+                                  cfg=req.cfg if req.cfg is not None
+                                  else self.cfg)
+            self.stats.admitted += 1
+            wait = max(0, self._now() - max(req.submit_tick, 0))
+            self.stats.wait_supersteps[wait] = (
+                self.stats.wait_supersteps.get(wait, 0) + 1)
+            self._m_admitted.inc()
+            self._m_wait.observe(wait)
+            self.trace.instant("admit", cat="request", tid=self._track,
+                               uid=req.uid, slot=g, shard=g // self.shard_G,
+                               wait=wait)
+            active += 1
 
     def _active(self) -> np.ndarray:
         return np.array([s is not None for s in self.slots], bool)
@@ -444,6 +515,28 @@ class ArenaPool:
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
+
+    def holds(self, uid: int) -> bool:
+        """True while `uid` occupies a slot.  Safe on retired pools — a
+        released arena holds nothing, and the probe never touches slot
+        state that retirement dropped (SearchHandle.status uses this
+        instead of reaching into `slots`)."""
+        if self.retired:
+            return False
+        return any(s is not None and s.req.uid == uid for s in self.slots)
+
+    def deadline_ticks(self) -> list:
+        """Absolute deadline ticks of every queued and in-flight request.
+        Safe on retired pools: retirement is only legal with no occupied
+        slot, so only the queue (which survives resurrection-on-submit)
+        is consulted there (DeadlineAwarePolicy orders pools with this
+        instead of probing `slots` directly)."""
+        out = [r.deadline_tick for r in self.queue
+               if r.deadline_tick is not None]
+        if not self.retired:
+            out += [s.req.deadline_tick for s in self.slots
+                    if s is not None and s.req.deadline_tick is not None]
+        return out
 
     # ---- cancellation (client cancel / scheduler deadline eviction) ----
     def cancel(self, uid: int, reason: str = "cancel") -> bool:
@@ -495,6 +588,11 @@ class ArenaPool:
         self.exec.release()
         self.exec = None
         self.sts = None
+        # drop the per-slot list too (fresh, all-free): probes that still
+        # reach a retired pool must never see stale slot objects, and the
+        # retired-safe accessors (holds / deadline_ticks / shard_loads)
+        # stay well-defined
+        self.slots = [None] * self.G
         self.retired = True
         self.stats.retirements += 1
         self._m_retire.inc()
@@ -502,7 +600,10 @@ class ArenaPool:
         return True
 
     def _resurrect(self):
-        self.exec = make_intree_executor(self.cfg, self.G, self.executor_name)
+        self.exec = make_intree_executor(self.cfg, self.G,
+                                         self.executor_name,
+                                         n_shards=self.n_shards,
+                                         devices=self.shard_devices)
         self.sts = [StateTable(self.cfg.X, self.env.state_shape,
                                self.env.state_dtype) for _ in range(self.G)]
         self.retired = False
@@ -705,7 +806,9 @@ class ArenaPool:
                       self.alternating_signs)
             if self.trace.enabled:
                 ex.block()   # fence: device backup time stays in this span
-        if ex is not self.exec:
+        compacted = (pend.compacted if pend.compacted is not None
+                     else ex is not self.exec)
+        if compacted:
             self.stats.compacted_supersteps += 1
             if not self.persistent_compaction:
                 # per-superstep mode: scatter (and re-gather next tick)
@@ -742,12 +845,22 @@ class ArenaPool:
         """True when this pool can run fused dispatches: a device
         executor (reference keeps the phase-by-phase oracle), a
         device-evaluable env twin, a device value backend, and no
-        expand-all priors (those force the host expansion path)."""
+        expand-all priors (those force the host expansion path).  A
+        sharded executor is fused-capable when every per-device child
+        is (the fused program runs per shard, never across shards)."""
         from repro.envs.device import has_device_env, has_device_sim
 
+        ex = self.exec
+        if ex is None:
+            return False
+        shards = getattr(ex, "shards", None)
+        if shards is not None:
+            fused_ok = all(hasattr(c, "run_supersteps")
+                           for c, _, _ in shards)
+        else:
+            fused_ok = hasattr(ex, "run_supersteps")
         return (not self.cfg.expand_all
-                and self.exec is not None
-                and hasattr(self.exec, "run_supersteps")
+                and fused_ok
                 and has_device_env(self.env)
                 and has_device_sim(self.sim))
 
@@ -759,7 +872,17 @@ class ArenaPool:
         host path, so every escape stays on the K=1 oracle trajectory).
         Falls back to a single phase-by-phase superstep when K <= 1 or
         the pool is not fused-capable.  Returns the number of complete
-        supersteps executed (0 when no slot is occupied)."""
+        supersteps executed (0 when no slot is occupied).
+
+        At D > 1 each shard dispatches its OWN fused program on its own
+        device, runs to its own escape, and handles its own
+        commits/escapes before the next shard dispatches — a commit
+        boundary only stops the shard that hit it, so the scheduler
+        clock advances by the max over shards.  Per-slot trajectories
+        are unchanged (commit boundaries are slot-local; the lockstep
+        stop inside a program only decides dispatch grouping), so
+        per-request results stay bit-identical to D=1; pool-total
+        dispatch/superstep counters become per-shard sums."""
         K = self.supersteps_per_dispatch
         if max_supersteps is not None:
             K = min(K, max(1, int(max_supersteps)))
@@ -775,8 +898,54 @@ class ArenaPool:
         if not active.any():
             self.trace.end(tok)
             return 0
-        t0 = time.perf_counter()
+        if self.n_shards > 1:
+            # Sharded fused path: run masked on the per-device arenas,
+            # never on a session sub.  A shard's move commit writes the
+            # full arena (reroot/reset/evict), which would silently
+            # stale a resident sub-arena other shards still dispatch on
+            # this tick — so close any session up front.  (The classic
+            # path keeps compaction: there a full superstep spans every
+            # shard before any commit.)  Supersteps are
+            # grouping-independent, so results are unchanged.
+            self._close_session()
+            self._compacting = False
+            act_idx = np.flatnonzero(active)
+            self.last_decision = {
+                "A": len(act_idx), "G": self.G,
+                "occupancy": len(act_idx) / self.G, "compacted": False,
+                "G_exec": self.G, "session": None,
+            }
+            ns = []
+            for child, lo, n_run in self.exec.shards:
+                in_shard = (act_idx >= lo) & (act_idx < lo + n_run)
+                if not in_shard.any():
+                    continue
+                c_idx = act_idx[in_shard]
+                c_active = np.zeros(child.G, bool)
+                c_active[c_idx - lo] = True
+                ns.append(self._fused_dispatch_one(
+                    child, c_active, c_idx - lo, c_idx, K,
+                    on_sub=False, tok=None))
+            self.trace.end(tok)
+            return max(ns) if ns else 0
         ex, ex_active, rows, act_idx = self._pick_execution(active)
+        return self._fused_dispatch_one(ex, ex_active, rows, act_idx, K,
+                                        on_sub=ex is not self.exec,
+                                        tok=tok)
+
+    def _fused_dispatch_one(self, ex, ex_active, rows, act_idx, K: int,
+                            on_sub: bool, tok) -> int:
+        """One fused device dispatch on one executor view: the whole
+        arena at D=1 (masked, or a session sub when `on_sub`), or a
+        single shard's child at D>1 (`rows` are executor-local, while
+        `act_idx` stays in global slot ids).  Handles its own escape —
+        a commit exit replays _commit_moves exactly like the K=1 path,
+        an expansion escape completes the partial superstep through the
+        ordinary host path — and returns the superstep count.  `tok` is
+        the open fused-dispatch span when this call owns it (None on
+        the sharded path, where the caller's loop holds one span over
+        all shards)."""
+        t0 = time.perf_counter()
         A, p = len(act_idx), self.p
         Ge = ex.G
         # per-row remaining move budgets + ONE upload of the dispatched
@@ -836,7 +1005,7 @@ class ArenaPool:
         self.stats.max_fused_rows = max(self.stats.max_fused_rows, A * p)
         if n:
             self._m_sim_rows.observe(A * p)
-        if ex is not self.exec:
+        if on_sub:
             # all n device-complete supersteps ran on the gathered sub-
             # arena (an escaped superstep counts itself in finish_superstep)
             self.stats.compacted_supersteps += n
@@ -861,7 +1030,8 @@ class ArenaPool:
             pend = _PendingStep(
                 ex=ex, ex_active=ex_active, rows=rows, act_idx=act_idx,
                 sel_dev=disp.sel_dev, hx=hx, sim_states=sim_states,
-                t_intree=t1 - t0, t_host=t2 - t1, tok=tok)
+                t_intree=t1 - t0, t_host=t2 - t1, tok=tok,
+                compacted=on_sub)
             t3 = time.perf_counter()
             values, priors = self.sim.evaluate(sim_states)
             self.finish_superstep(pend, values, priors,
@@ -872,7 +1042,8 @@ class ArenaPool:
         self.stats.t_intree += t1 - t0
         self._m_supersteps.inc(n)
         self._commit_moves(act_idx)
-        self.trace.end(tok)
+        if tok is not None:
+            self.trace.end(tok)
         return n
 
     # ---- move boundary: commit / advance / evict ----

@@ -47,6 +47,17 @@ Scheduling never changes what a request computes — per-slot tree
 evolution is schedule-independent (tests/test_executor_matrix.py), so
 every policy, fused or not, returns bit-identical per-request results;
 policies only move WHEN work happens (fairness, deadlines, batch shape).
+
+Multi-device serving: with ``n_shards=D`` every pool partitions its G
+slots into D per-device shard arenas (core/sharded.py) and the POOL does
+cross-device placement — each admission goes to the least-loaded enabled
+shard (ArenaPool._place_slot; ties break to the lowest shard id, then
+lowest free slot, so D=1 reduces exactly to the historical order).  The
+core stays device-agnostic: cross-pool fused evaluate batching, the
+policies, deadlines and retirement all operate on whole pools, and the
+global clock still advances by the deepest fused dispatch — now the max
+over per-shard device dispatches.  Placement is scheduling, not
+semantics: per-request results are bit-identical at any D.
 """
 
 from __future__ import annotations
@@ -164,13 +175,21 @@ class WeightedQueueDepthPolicy(SchedulePolicy):
 
     def _smoothed_depths(self, core) -> dict:
         """EWMA over each with-work bucket's backlog, advanced at most
-        once per core tick (admit_limits may be probed more often)."""
+        once per core tick (admit_limits may be probed more often).
+
+        Entries for buckets with no work — drained or retired — are
+        PRUNED, not kept: a retired bucket that resurrects later must
+        reseed its EWMA from its fresh backlog, or the stale smoothed
+        depth from its previous life would skew every bucket's
+        admission share for ticks after resurrection."""
         depths = {k: _depth(core.pools[k]) for k in core._order
                   if core.pools[k].has_work()}
         if core.ticks != self._last_tick:
             self._last_tick = core.ticks
             a = self.ewma_alpha
             reg = getattr(core, "registry", NULL_REGISTRY)
+            for k in [k for k in self._ewma if k not in depths]:
+                del self._ewma[k]
             for k, d in depths.items():
                 prev = self._ewma.get(k)
                 self._ewma[k] = d if prev is None else a * d + (1 - a) * prev
@@ -206,11 +225,11 @@ class DeadlineAwarePolicy(SchedulePolicy):
     deadline_first = True
 
     def _slack(self, core, key) -> float:
-        pool = core.pools[key]
-        deadlines = [r.deadline_tick for r in pool.queue
-                     if r.deadline_tick is not None]
-        deadlines += [s.req.deadline_tick for s in pool.slots
-                      if s is not None and s.req.deadline_tick is not None]
+        # deadline_ticks() is retired-safe: a retired pool's slot list
+        # is released with its arena, so probing pool.slots here would
+        # read freed state (queued deadlines still count — queued work
+        # on a retired pool is what triggers resurrection)
+        deadlines = core.pools[key].deadline_ticks()
         return (min(deadlines) - core.ticks) if deadlines else math.inf
 
     def order(self, core):
@@ -269,6 +288,8 @@ class SchedulerCore:
         tracer=None,
         metrics=None,
         result_ttl_ticks: Optional[int] = None,
+        n_shards: int = 1,
+        shard_devices: Optional[list] = None,
     ):
         self.env, self.sim = env, sim
         self.G, self.p = G, p
@@ -306,6 +327,12 @@ class SchedulerCore:
         # tick in ONE compiled program; host-bound pools keep the
         # phase-by-phase cadence on the same clock
         self.supersteps_per_dispatch = max(1, int(supersteps_per_dispatch))
+        # D-sharded serving: every bucket's pool partitions its G slots
+        # across n_shards per-device arenas (core/sharded.py); the pool
+        # owns intra-bucket cross-device placement, the core stays
+        # device-agnostic
+        self.n_shards = max(1, int(n_shards))
+        self.shard_devices = shard_devices
         self._pool_kw = dict(
             alternating_signs=alternating_signs,
             reuse_subtree=reuse_subtree,
@@ -313,6 +340,8 @@ class SchedulerCore:
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
             supersteps_per_dispatch=supersteps_per_dispatch,
+            n_shards=self.n_shards,
+            shard_devices=shard_devices,
         )
         # ONE host-expansion engine (and process pool, in "pool" mode)
         # shared by every bucket
@@ -519,7 +548,13 @@ class SchedulerCore:
         handle surface and the move log — retirement bounds arena memory,
         this bounds the host-side result ledger.  Expired uids stay in
         `expired_uids` so their handles report status "expired" instead
-        of reverting to "unknown"."""
+        of reverting to "unknown".
+
+        Popping `move_log[uid]` only unlinks the LIST from the dict; the
+        list object itself is never mutated here.  SearchHandle.moves()
+        relies on that: a live iterator holds the list reference it
+        first resolved, so expiry mid-iteration stops growth but never
+        truncates events the iterator hasn't yielded yet."""
         if self.result_ttl_ticks is None or not pool.completed:
             return
         keep = []
@@ -537,10 +572,13 @@ class SchedulerCore:
 
     def run(self, max_ticks: int = 100_000) -> list[SearchResult]:
         """Drain every pool (compatibility surface for the adapters; new
-        code drives poll/run_until on the client)."""
-        steps = 0
-        while steps < max_ticks and self.tick():
-            steps += 1
+        code drives poll/run_until on the client).  Bounded against the
+        CLOCK, not the call count: a fused dispatch advances `ticks` by
+        up to K per tick() call, so counting calls would overshoot the
+        budget by a factor of K."""
+        start = self.ticks
+        while self.ticks - start < max_ticks and self.tick():
+            pass
         return self.completed
 
     # ---- aggregate views ----

@@ -430,6 +430,50 @@ def test_no_ttl_keeps_retired_pool_results_forever():
     cl.close()
 
 
+def test_moves_stream_survives_ttl_expiry_mid_iteration():
+    """Regression: the result TTL pops move_log[uid] from the dict while
+    a live moves() iterator may still be draining that list.  The
+    iterator must hold the list object it first resolved — the expiry
+    unlinks the dict entry but never mutates the list — so no event the
+    iterator hasn't yielded yet is silently truncated."""
+    cl = _client(G=2, retire_after_ticks=2, result_ttl_ticks=2)
+    hb = cl.submit(SearchRequest(uid=0, seed=0, budget=2, moves=3,
+                                 cfg=CFG_B))
+    cl.submit(SearchRequest(uid=1, seed=1, budget=80, cfg=CFG_A))
+    it = hb.moves()
+    first = next(it)                     # iterator now holds the log list
+    res = hb.result()                    # drive uid 0 to completion
+    cl.run_until(lambda c: c.handle(0).status() == "expired")
+    assert 0 not in cl.core.move_log     # the dict entry IS gone...
+    got = [first] + list(it)             # ...but the stream is complete
+    assert [e.action for e in got] == res.actions
+    assert [e.move_index for e in got] == list(range(len(res.actions)))
+    cl.close()
+
+
+def test_retired_pool_probes_are_safe():
+    """Regression: status() and the deadline-aware policy used to probe
+    pool.slots directly, which a retired pool has released with its
+    arena.  The retired-safe accessors (ArenaPool.holds /
+    deadline_ticks) answer without touching freed state."""
+    import math
+
+    from repro.service.scheduler_core import DeadlineAwarePolicy
+
+    cl = _client(G=2, retire_after_ticks=2)
+    hb = cl.submit(SearchRequest(uid=0, seed=0, budget=2, cfg=CFG_B))
+    cl.submit(SearchRequest(uid=1, seed=1, budget=40, cfg=CFG_A))
+    key_b = bucket_key(CFG_B)
+    cl.run_until(lambda c: c.core.pools[key_b].retired)
+    pool = cl.core.pools[key_b]
+    assert pool.exec is None             # arena really released
+    assert pool.holds(0) is False
+    assert pool.deadline_ticks() == []
+    assert hb.status() == "done"         # handle probe on a retired pool
+    assert DeadlineAwarePolicy()._slack(cl.core, key_b) == math.inf
+    cl.close()
+
+
 # ---------------------------------------------------------------------------
 # EWMA-smoothed weighted-queue-depth admission caps
 # ---------------------------------------------------------------------------
@@ -487,6 +531,129 @@ def test_weighted_policy_smooths_admission_caps():
     assert flat.admit_limits(core)["b"] == 1
     with pytest.raises(ValueError):
         WeightedQueueDepthPolicy(ewma_alpha=0.0)
+
+
+def test_weighted_policy_prunes_drained_bucket_ewma():
+    """Regression: _ewma entries for buckets that drained or retired
+    were never pruned, so a bucket resurrected after idling reused the
+    stale smoothed depth from its previous life and skewed every
+    bucket's admission share.  No-work buckets are dropped each tick;
+    a returning bucket reseeds from its fresh backlog."""
+    from repro.service.scheduler_core import WeightedQueueDepthPolicy
+
+    pol = WeightedQueueDepthPolicy(ewma_alpha=0.5)
+    a, b = _FakePool(CFG_A, 4, 8), _FakePool(CFG_B, 4, 8)
+    core = _FakeCore({"a": a, "b": b})
+    pol.admit_limits(core)
+    assert set(pol._ewma) == {"a", "b"}
+    # bucket b drains (and, in the real core, retires): its entry goes
+    b.queue = []
+    b.has_work = lambda: False
+    core.ticks = 2
+    pol.admit_limits(core)
+    assert set(pol._ewma) == {"a"}
+    # resurrection: fresh backlog of 2 seeds the EWMA at 2 — NOT a decay
+    # from the dead bucket's smoothed depth of 8
+    b.queue = [None] * 2
+    b.has_work = lambda: True
+    core.ticks = 3
+    pol.admit_limits(core)
+    assert pol._ewma["b"] == 2
+
+
+# ---------------------------------------------------------------------------
+# D-sharded serving: least-loaded placement + failover
+# ---------------------------------------------------------------------------
+
+def test_shard_placement_balances_load():
+    """Admissions go to the least-loaded enabled shard (ties break to
+    the lowest shard id, then lowest free slot): four requests into a
+    G=4 / D=2 pool alternate shards instead of filling shard 0 first."""
+    cl = _client(G=4, n_shards=2)
+    for i in range(4):
+        cl.submit(SearchRequest(uid=i, seed=i, budget=30, moves=2))
+    cl.poll(1)                            # first tick admits everything
+    (pool,) = cl.core.pools.values()
+    assert pool.n_shards == 2 and pool.shard_G == 2
+    assert pool.shard_loads() == [2, 2]
+    # uid 0 -> shard 0 (tie, lowest id), uid 1 -> shard 1 (now least
+    # loaded), uid 2 -> shard 0 again, uid 3 -> shard 1
+    assert [s.req.uid for s in pool.slots] == [0, 2, 1, 3]
+    assert [pool.shard_of(g) for g in range(4)] == [0, 0, 1, 1]
+    cl.close()
+
+
+def test_shard_failover_disable_and_reenable():
+    """set_shard_enabled steers admission around a drained shard: with
+    shard 0 disabled every new request lands on shard 1; re-enabling
+    restores least-loaded placement.  Results complete either way —
+    placement never touches semantics."""
+    cl = _client(G=4, n_shards=2)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=3))
+    (pool,) = cl.core.pools.values()
+    pool.set_shard_enabled(0, False)
+    cl.submit(SearchRequest(uid=1, seed=1, budget=3))
+    cl.poll(1)
+    assert pool.shard_loads() == [0, 2]   # both on shard 1
+    assert all(s is None for s in pool.slots[:2])
+    pool.set_shard_enabled(0, True)
+    cl.submit(SearchRequest(uid=2, seed=2, budget=3))
+    cl.poll(1)
+    assert pool.shard_loads()[0] == 1     # shard 0 takes work again
+    done = {r.uid for r in cl.drain()}
+    assert {0, 1, 2} <= done
+    cl.close()
+
+
+def test_shard_count_must_divide_g():
+    with pytest.raises(ValueError, match="n_shards"):
+        cl = _client(G=3, n_shards=2)
+        cl.submit(SearchRequest(uid=0, seed=0, budget=2))
+
+
+def test_resurrected_pool_keeps_shard_partition():
+    """A retired sharded pool resurrects with the same D-way partition
+    (the arena is rebuilt through the same factory arguments)."""
+    cl = _client(G=4, n_shards=2, retire_after_ticks=2)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=2, cfg=CFG_B))
+    cl.submit(SearchRequest(uid=1, seed=1, budget=40, cfg=CFG_A))
+    key_b = bucket_key(CFG_B)
+    cl.run_until(lambda c: c.core.pools[key_b].retired)
+    h = cl.submit(SearchRequest(uid=2, seed=0, budget=2, cfg=CFG_B))
+    pool = cl.core.pools[key_b]
+    assert not pool.retired
+    assert getattr(pool.exec, "n_shards", 1) == 2
+    assert h.result().actions
+    cl.close()
+
+
+# ---------------------------------------------------------------------------
+# tick budgets bound the CLOCK (fused dispatch advances it by up to K)
+# ---------------------------------------------------------------------------
+
+def test_run_max_ticks_bounds_clock_not_calls():
+    """Regression: run(max_ticks) counted tick() CALLS, but one fused
+    dispatch advances the clock by up to K — K=4 could burn 4x the
+    stated budget.  The loop is now bounded against core.ticks and may
+    overshoot by at most one dispatch."""
+    cl = _client(G=2, supersteps_per_dispatch=4)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=60, moves=2))
+    cl.core.run(max_ticks=8)
+    assert cl.stats.fused_dispatches > 0  # the fused path really drove this
+    assert cl.core.ticks < 8 + 4
+    cl.close()
+
+
+def test_result_max_ticks_bounds_clock_under_fused_dispatch():
+    """Same bug on the handle: result(max_ticks) counted poll() calls.
+    A request far from completion must stop within ~max_ticks of clock,
+    not max_ticks dispatches."""
+    cl = _client(G=2, supersteps_per_dispatch=8)
+    h = cl.submit(SearchRequest(uid=0, seed=0, budget=200, moves=4))
+    with pytest.raises(RuntimeError, match="no result"):
+        h.result(max_ticks=16)
+    assert cl.core.ticks < 16 + 8
+    cl.close()
 
 
 # ---------------------------------------------------------------------------

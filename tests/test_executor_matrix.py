@@ -384,3 +384,100 @@ def test_new_executors_must_enroll():
     if someone renames the constant away — the auto-enrolment contract."""
     assert set(BIT_COMPATIBLE) <= set(EXECUTOR_NAMES)
     assert {"reference", "faithful"} <= set(EXECUTOR_NAMES)
+
+
+# ---------------------------------------------------------------------------
+# D-sharded serving (core/sharded.py): placement is scheduling, never
+# semantics.  Per-REQUEST fields are compared — pool-total dispatch
+# counters legitimately differ at D > 1 (per-shard sums), but what any
+# request computes may not.  On a 1-device host the shard->device map
+# wraps (launch.mesh.serving_devices), so the partition logic runs
+# everywhere; the CI leg with
+# XLA_FLAGS=--xla_force_host_platform_device_count=4 puts each shard on
+# its own device.
+# ---------------------------------------------------------------------------
+
+SHARD_G = 4                    # divisible by every D leg (G=3 above isn't)
+_SHARD_BASE: dict = {}
+
+
+def _run_sharded(executor, n_shards, k=1, compact=0.0):
+    cl = SearchClient(ENV, BanditValueBackend(), G=SHARD_G, p=P,
+                      executor=executor, default_cfg=CFG,
+                      n_shards=n_shards, supersteps_per_dispatch=k,
+                      compact_threshold=compact)
+    try:
+        handles = [cl.submit(SearchRequest(cfg=CFG, **kw))
+                   for kw in _SCHEDULE]
+        done = {h.uid: h.result() for h in handles}
+        (pool,) = cl.core.pools.values()
+        assert pool.n_shards == n_shards
+        if n_shards > 1:
+            assert getattr(pool.exec, "n_shards", 1) == n_shards
+        if k > 1 and executor in FUSED_EXECUTORS:
+            assert pool.stats.fused_dispatches > 0
+        if compact > 0.0:
+            assert pool.stats.compacted_supersteps > 0
+    finally:
+        cl.close()
+    return done
+
+
+def _shard_base(executor, k=1):
+    """D=1 baseline per (executor, K), cached across the leg matrix."""
+    key = (executor, k)
+    if key not in _SHARD_BASE:
+        _SHARD_BASE[key] = _run_sharded(executor, 1, k=k)
+    return _SHARD_BASE[key]
+
+
+def _assert_requests_identical(done_a, done_b, label):
+    assert sorted(done_a) == sorted(done_b), label
+    for uid in done_b:
+        a, b = done_a[uid], done_b[uid]
+        assert a.actions == b.actions, f"{label} uid={uid}"
+        assert a.rewards == b.rewards, f"{label} uid={uid}"
+        assert a.supersteps == b.supersteps, f"{label} uid={uid}"
+        for va, vb in zip(a.visit_counts, b.visit_counts):
+            np.testing.assert_array_equal(va, vb,
+                                          err_msg=f"{label} uid={uid}")
+        for k in b.tree_snapshot:
+            np.testing.assert_array_equal(
+                a.tree_snapshot[k], b.tree_snapshot[k],
+                err_msg=f"{label} uid={uid} field={k}")
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+@pytest.mark.parametrize("n_shards", [2, 4], ids=["d2", "d4"])
+def test_sharded_serving_bit_identical(executor, n_shards):
+    """Acceptance: the matrix schedule through a D-sharded arena (least-
+    loaded placement across per-device shard arenas) returns bit-
+    identical per-request results to the same client at n_shards=1, on
+    every executor."""
+    got = _run_sharded(executor, n_shards)
+    _assert_requests_identical(got, _shard_base(executor),
+                               f"shard/{executor}/D={n_shards}")
+
+
+@pytest.mark.parametrize("executor", ["reference", "faithful"])
+def test_sharded_compaction_bit_identical(executor):
+    """The compaction transform composes with sharding: a D=2 run whose
+    drain tail gathers per-shard dense sub-arenas (ShardedExecutor
+    .gather_sub, one sub per device behind one session) still equals
+    the executor's own D=1 masked run per request."""
+    got = _run_sharded(executor, 2, compact=0.7)
+    _assert_requests_identical(got, _shard_base(executor),
+                               f"shard-compact/{executor}")
+
+
+@pytest.mark.parametrize("executor", FUSED_EXECUTORS)
+@pytest.mark.parametrize("n_shards", [2, 4], ids=["d2", "d4"])
+def test_sharded_fused_dispatch_bit_identical(executor, n_shards):
+    """Acceptance: per-shard fused K-superstep dispatches — each shard
+    runs its own device program to its own escape — stay bit-identical
+    per request to the D=1 fused run.  Commit boundaries are slot-
+    local, so dispatch grouping (which only decides when the host
+    gets control) never leaks into results."""
+    got = _run_sharded(executor, n_shards, k=4)
+    _assert_requests_identical(got, _shard_base(executor, k=4),
+                               f"shard-fused/{executor}/D={n_shards}")
