@@ -29,6 +29,13 @@ cannot meet (watch it come back "evicted"), and one is cancelled
 mid-flight.  Cold pools retire after --retire-after idle ticks (their
 arena is freed; watch the pool summary) and resurrect on demand.
 
+--overlap (client mode) turns on pipelined supersteps: each pool's
+slots are split into --gangs gangs and the superstep is double-buffered
+— gang A's host half (expansion + simulation IPC) runs while gang B's
+device in-tree phases (select -> insert) are already dispatched through
+JAX's async queue.  Results are bit-identical to lock-step; the summary
+prints the host-wait / device-wait / overlapped pipeline split.
+
 --frontend keeps the pre-handle ServiceFrontend adapter path.
 
 Observability (client mode): --trace-out records every superstep phase
@@ -50,9 +57,12 @@ the Fig. 8-style breakdown the paper's CPU/FPGA numbers rest on.
   PYTHONPATH=src python examples/service_demo.py --client
   PYTHONPATH=src python examples/service_demo.py --client \
       --policy weighted-queue-depth --trace-out trace.json --metrics
+  PYTHONPATH=src python examples/service_demo.py --client --overlap \
+      --expansion pool --gangs 2
 """
 
 import argparse
+import time
 
 import numpy as np
 
@@ -72,15 +82,21 @@ def run_client(args):
     """SearchClient handle API: opaque handles, streamed moves, policies,
     deadlines, cancellation and cold-pool retirement."""
     env = BanditTreeEnv(fanout=6, terminal_depth=12)
+    # overlap mode double-buffers gangs, which is incompatible with
+    # compaction (slot rows must stay put while a gang is in flight)
+    compact = 0.0 if args.overlap else 0.5
     client = SearchClient(
         env, BanditValueBackend(), G=4, p=16,
         executor=args.executor, expansion=args.expansion,
         policy=args.policy, retire_after_ticks=args.retire_after,
-        compact_threshold=0.5, compact_exit_threshold=0.75,
+        compact_threshold=compact,
+        compact_exit_threshold=0.75 if compact else None,
         supersteps_per_dispatch=args.supersteps_per_dispatch,
         n_shards=args.shards,
+        overlap=args.overlap, n_gangs=args.gangs,
         trace=bool(args.trace_out), metrics=args.metrics,
     )
+    t_serve0 = time.perf_counter()
     handles = [client.submit(SearchRequest(
         uid=i, seed=i, budget=6 + 2 * (i % 4), moves=1 if i % 3 else 3,
         cfg=CFGS[i % len(CFGS)]), priority=i % 2)
@@ -108,6 +124,7 @@ def run_client(args):
 
     client.run_until(lambda c: all(h.done() for h in handles)
                      and doomed.done())
+    t_serve = time.perf_counter() - t_serve0
     for h in sorted(handles + [doomed, victim], key=lambda h: h.uid):
         r = h.result(wait=False)
         print(f"req {h.uid:2d}: status={h.status():9s} "
@@ -125,7 +142,25 @@ def run_client(args):
               f"{ps['completed']} done in {ps['supersteps']} supersteps "
               f"[{state}, idle={ps['idle_ticks']}]")
     s = client.stats
-    print(f"\n{s.completed} results ({s.cancelled} cancelled, "
+    if args.overlap:
+        # per-pool pipeline split: host wait (expansion/sim IPC) vs
+        # device wait (staged in-tree readback) vs overlapped wall time
+        wall = host = dev = 0.0
+        for pool in client.core.pools.values():
+            wall += pool._ov_wall
+            host += pool._ov_wait_host
+            dev += pool._ov_wait_dev
+        hid = max(wall - host - dev, 0.0)
+        print(f"\noverlap pipeline ({args.gangs} gangs): "
+              f"{t_serve:.3f}s serving wall; per-tick split "
+              f"host-wait {host:.3f}s / device-wait {dev:.3f}s / "
+              f"overlapped {hid:.3f}s "
+              f"({100.0 * hid / max(wall, 1e-9):.0f}% of pipeline time "
+              f"hidden behind the other gang)")
+    else:
+        print(f"\nserving wall time {t_serve:.3f}s "
+              f"(re-run with --overlap to double-buffer gangs)")
+    print(f"{s.completed} results ({s.cancelled} cancelled, "
           f"{s.deadline_evictions} deadline-evicted, "
           f"{s.retirements} pool retirements) in {s.ticks} ticks; "
           f"p95 admission wait {s.wait_percentile(95)} ticks; "
@@ -206,6 +241,17 @@ def main():
                          "needs device-evaluable env + sim twins (the "
                          "bandit env here has them; host-only backends "
                          "silently keep the K=1 phase-by-phase path)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="client mode: pipelined supersteps — split each "
+                         "pool's slots into --gangs gangs and double-"
+                         "buffer the superstep, so one gang's host "
+                         "expansion/simulation runs while the next gang's "
+                         "device in-tree phases are already dispatched "
+                         "(results stay bit-identical; disables "
+                         "compaction, which needs slot rows to stay put)")
+    ap.add_argument("--gangs", type=int, default=2, metavar="N",
+                    help="client mode: gangs per pool for --overlap "
+                         "(2 = classic double buffering)")
     ap.add_argument("--shards", type=int, default=1, metavar="D",
                     help="client mode: partition each bucket's G slots "
                          "across D per-device shard arenas (least-loaded "

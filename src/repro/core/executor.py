@@ -239,8 +239,20 @@ class JaxExecutor:
         return sel
 
     def insert(self, active: np.ndarray, sel):
+        return self.insert_host(self.insert_dev(active, sel))
+
+    def insert_dev(self, active: np.ndarray, sel):
+        """Dispatch Node Insertion and return the DEVICE id block without
+        reading it back — the overlap mode stages a gang's select+insert
+        asynchronously and defers the (blocking) host read to
+        insert_host() when that gang's host half actually starts."""
         self.trees, new_nodes = intree.insert_arena(
             self.cfg, self.trees, jnp.asarray(active), sel)
+        return new_nodes
+
+    def insert_host(self, new_nodes):
+        """Blocking half of insert(): fetch the staged [G, p, Fp] id block
+        to host.  insert() == insert_host(insert_dev(...)) bit-exactly."""
         return np.asarray(jax.device_get(new_nodes))
 
     def finalize(self, nodes, num_actions, terminal, prior_parent, priors_fx):
@@ -276,6 +288,25 @@ class JaxExecutor:
             self.cfg, self._fused_variant, self.trees, np.asarray(active),
             p, K, env, sim, states, budget_left, alternating)
         return disp
+
+    def run_supersteps_submit(self, active, p: int, K: int, env, sim,
+                              states, budget_left, alternating: bool):
+        """Non-blocking half of run_supersteps: queue the fused program
+        and return a PendingDispatch of device outputs WITHOUT any host
+        read — the overlap mode's staged fused dispatch."""
+        from repro.core import fused
+
+        self.trees, pend = fused.submit_supersteps(
+            self.cfg, self._fused_variant, self.trees, np.asarray(active),
+            p, K, env, sim, states, budget_left, alternating)
+        return pend
+
+    def run_supersteps_collect(self, pend):
+        """Blocking half: fetch the escape scalars / host views of a
+        staged dispatch.  run_supersteps == collect(submit(...))."""
+        from repro.core import fused
+
+        return fused.collect_supersteps(pend)
 
     # -- host-side slot access -----------------------------------------
     def reset_slot(self, g: int, root_num_actions: int):
@@ -428,6 +459,14 @@ class ReferenceExecutor:
         for g in np.flatnonzero(active):
             slot_sel = {k: v[g] for k, v in sel.items()}
             new_nodes[g] = ref.insert_phase(self.cfg, self.trees[g], slot_sel)
+        return new_nodes
+
+    # async split: numpy has no device, so "dev" computes and "host" is
+    # identity — the overlap schedule runs unchanged on the oracle
+    def insert_dev(self, active: np.ndarray, sel: dict) -> np.ndarray:
+        return self.insert(active, sel)
+
+    def insert_host(self, new_nodes: np.ndarray) -> np.ndarray:
         return new_nodes
 
     def finalize(self, nodes, num_actions, terminal, prior_parent, priors_fx):

@@ -26,6 +26,20 @@ All modes are bit-identical: the flattening preserves the loop's
 property-tested against scalar ``step`` (tests/test_vector_env.py); the
 full cross-executor guarantee is pinned by tests/test_executor_matrix.py.
 
+Asynchronous expansion (the overlap serving mode's host half):
+``expand_submit`` does the flattening and — in pool mode — posts the env
+batch to the worker processes WITHOUT waiting, returning a
+PendingExpansion handle; ``expand_collect`` blocks on the posted chunks
+and finishes the ST scatter.  ``expand`` is submit + collect back to
+back, so the split is bit-identical to the blocking call and costs the
+same single `batch_calls` round-trip.  Between submit and collect the
+worker processes step their chunks while the caller's thread runs
+another gang's Simulation / finalize / BackUp — that concurrency is the
+whole point of the split (service.pool gang pipeline).  Modes without an
+async env leg (loop / vector, or a tiny pooled batch) compute eagerly at
+submit time: collect is then a cheap unwrap, and the overlap schedule
+stays legal for every mode.
+
 Both drivers consume this engine: TreeParallelMCTS feeds it one slot,
 service.pool.ArenaPool feeds it every active slot of a superstep (and a
 multi-bucket ServiceFrontend shares ONE engine across all its pools).
@@ -41,7 +55,9 @@ import numpy as np
 from repro.core import fixedpoint as fx
 from repro.core.state_table import StateTable
 from repro.core.tree import NULL
-from repro.envs.vector import PoolVectorEnv, has_fused_step, has_vector_env
+from repro.envs.vector import (
+    PoolVectorEnv, has_async_step, has_fused_step, has_vector_env,
+)
 from repro.obs.metrics import NULL_REGISTRY
 from repro.obs.trace import NULL_TRACER
 
@@ -140,6 +156,22 @@ def host_expand_phase(env, st: StateTable, sel: dict,
     return out
 
 
+@dataclasses.dataclass
+class PendingExpansion:
+    """Handle for an in-flight ``expand_submit``: the flattening already
+    happened (leaf reads, per-slot HostExpansion shells, [B] batch rows)
+    and the env batch is either posted to the pool workers (``token``) or
+    already computed (``eager`` / loop-mode ``out``).  One-shot:
+    ``expand_collect`` consumes it."""
+
+    per: Any            # [(g, st, sel, new_nodes, leaf_states, hx), ...]
+    seg: Any            # [(pos, worker, expand_action, k), ...] batch rows
+    out: dict           # {g: HostExpansion} (shells until collect scatters)
+    token: Any = None   # venv PendingBatch when the IPC is in flight
+    eager: Any = None   # (nxt, term, na_raw) when computed at submit
+    counted: bool = False  # metrics already recorded (loop mode / expand())
+
+
 class ExpansionEngine:
     """Batched host-expansion across every active slot of a superstep.
 
@@ -185,14 +217,52 @@ class ExpansionEngine:
                 # loop mode: one scalar env.step per row
                 self._m_calls.inc(rows)
             else:
-                out = self._expand_batched(list(slots))
+                pend = self._submit_batched(list(slots))
+                out = self._collect_batched(pend)
                 rows = sum(len(hx.fin_nodes) for hx in out.values())
                 self._m_calls.inc(1 if rows else 0)
             self._m_rows.inc(rows)
             return out
 
+    # -- asynchronous split (overlap mode's host half) ------------------
+    def expand_submit(self, slots, tid: int = 0) -> "PendingExpansion":
+        """Flatten every slot's pending expansions and — in pool mode —
+        post the env batch to the workers without waiting.  Modes without
+        an async leg compute eagerly here; either way the returned handle
+        goes through expand_collect, and submit + collect is bit-identical
+        to expand()."""
+        with self.trace.span("expand-submit", cat="phase", tid=tid,
+                             slots=len(slots) if hasattr(slots, "__len__")
+                             else -1, mode=self.mode):
+            if self.mode == "loop":
+                out = {g: host_expand_phase(self.env, st, sel, nn)
+                       for g, st, sel, nn in slots}
+                rows = sum(len(hx.fin_nodes) for hx in out.values())
+                self._m_calls.inc(rows)
+                self._m_rows.inc(rows)
+                return PendingExpansion(per=None, seg=None, out=out,
+                                        counted=True)
+            return self._submit_batched(list(slots))
+
+    def expand_collect(self, pending: "PendingExpansion",
+                       tid: int = 0) -> dict:
+        """Redeem an expand_submit handle: block on the posted env batch
+        (if one is in flight) and finish the finalize-metadata / ST
+        scatter."""
+        if pending.per is None:       # loop mode: computed at submit
+            return pending.out
+        with self.trace.span("expand-collect", cat="phase", tid=tid,
+                             mode=self.mode):
+            out = self._collect_batched(pending)
+            if not pending.counted:
+                rows = sum(len(hx.fin_nodes) for hx in out.values())
+                self._m_calls.inc(1 if rows else 0)
+                self._m_rows.inc(rows)
+                pending.counted = True
+            return out
+
     # -- one flattened batch over all slots' pending expansions ---------
-    def _expand_batched(self, slots) -> dict:
+    def _submit_batched(self, slots) -> "PendingExpansion":
         per, seg = [], []
         flat_states, flat_actions = [], []
         for pos, (g, st, sel, new_nodes) in enumerate(slots):
@@ -215,19 +285,36 @@ class ExpansionEngine:
                     flat_states.append(leaf_states[j])
                     flat_actions.append(ea)
                     seg.append((pos, j, ea, 1))
-        out = {g: hx for (g, _, _, _, _, hx) in per}
+        pend = PendingExpansion(per=per, seg=seg,
+                                out={g: hx for (g, _, _, _, _, hx) in per})
         if not seg:  # saturated/terminal superstep: nothing to expand
-            return out
-
-        if has_fused_step(self._venv):
+            return pend
+        states = np.stack(flat_states)
+        actions = np.asarray(flat_actions, np.int64)
+        if has_async_step(self._venv):
+            # post once, wait at collect: the workers step their chunks
+            # while the caller's thread runs another gang's superstep
+            pend.token = self._venv.submit_batch(states, actions)
+        elif has_fused_step(self._venv):
             # one round-trip: step + successor action counts together
             # (halves the per-superstep pickling of the pool fallback)
             nxt, _, term, na_raw = self._venv.step_and_count_batch(
-                np.stack(flat_states), np.asarray(flat_actions, np.int64))
+                states, actions)
+            pend.eager = (nxt, term, na_raw)
         else:
-            nxt, _, term = self._venv.step_batch(
-                np.stack(flat_states), np.asarray(flat_actions, np.int64))
-            na_raw = self._venv.num_actions_batch(nxt)
+            nxt, _, term = self._venv.step_batch(states, actions)
+            pend.eager = (nxt, term, self._venv.num_actions_batch(nxt))
+        return pend
+
+    def _collect_batched(self, pending: "PendingExpansion") -> dict:
+        per, seg, out = pending.per, pending.seg, pending.out
+        if not seg:
+            return out
+        if pending.token is not None:
+            nxt, _, term, na_raw = self._venv.collect(pending.token)
+            pending.token = None
+        else:
+            nxt, term, na_raw = pending.eager
         term = np.asarray(term, bool)
         na = np.where(term, 0, np.asarray(na_raw))
 

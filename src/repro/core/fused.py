@@ -200,6 +200,59 @@ def _fused_program(cfg: TreeConfig, variant: str, p: int, K: int,
             out["size_pre"], out["sel"], out["new_nodes"])
 
 
+@dataclasses.dataclass
+class PendingDispatch:
+    """Device outputs of a queued fused program, NOT yet read to host.
+    submit_supersteps returns one; collect_supersteps blocks on it and
+    builds the FusedDispatch.  Everything here is a device array still in
+    flight under JAX async dispatch — holding the handle costs nothing."""
+
+    arena_size: Any      # [Ge] device sizes after the dispatch
+    states_out: Any      # [Ge, X, *S] device ST buffer
+    n: Any               # scalar: complete supersteps executed
+    esc: Any             # scalar: escape code
+    size_pre: Any        # [Ge] size before the most recent insert
+    sel: Any             # device SelectionResult
+    new_nodes: Any       # [Ge, p, Fp] device id block
+
+
+def submit_supersteps(cfg: TreeConfig, variant: str, trees: UCTree,
+                      active, p: int, K: int, env, sim, states,
+                      budget_left, alternating: bool):
+    """Queue up to K fused supersteps WITHOUT any host read.  Returns
+    (new_trees, PendingDispatch) — the overlap mode stages one gang's
+    dispatch here while another gang's host half runs, then redeems it
+    with collect_supersteps."""
+    arena, states_out, n, esc, size_pre, sel, new_nodes = _fused_program(
+        cfg, variant, p, K, env, sim, bool(alternating),
+        trees, jnp.asarray(states), jnp.asarray(active, bool),
+        jnp.asarray(budget_left, jnp.int32))
+    return arena, PendingDispatch(
+        arena_size=arena.size, states_out=states_out, n=n, esc=esc,
+        size_pre=size_pre, sel=sel, new_nodes=new_nodes)
+
+
+def collect_supersteps(pend: PendingDispatch) -> FusedDispatch:
+    """Blocking half: fetch the escape scalars and host views of a
+    staged fused dispatch and build the FusedDispatch."""
+    n = int(pend.n)
+    esc = int(pend.esc)
+    expand = esc == ESC_EXPAND
+    disp = FusedDispatch(
+        n=n, escape=ESCAPE_NAMES[esc],
+        size_pre=np.asarray(jax.device_get(pend.size_pre)),
+        sizes=np.asarray(jax.device_get(pend.arena_size)),
+        states=np.asarray(jax.device_get(pend.states_out)),
+        sel_dev=pend.sel if expand else None,
+        sel_host=None, new_nodes=None)
+    if expand:
+        from repro.core.executor import _sel_to_host
+
+        disp.sel_host = _sel_to_host(pend.sel)
+        disp.new_nodes = np.asarray(jax.device_get(pend.new_nodes))
+    return disp
+
+
 def run_supersteps(cfg: TreeConfig, variant: str, trees: UCTree,
                    active, p: int, K: int, env, sim, states,
                    budget_left, alternating: bool):
@@ -209,24 +262,10 @@ def run_supersteps(cfg: TreeConfig, variant: str, trees: UCTree,
     (uploaded once; new-node states come back in FusedDispatch.states —
     node ids are allocated contiguously, so the rows
     [size-at-dispatch-start, size_pre) are exactly the device-resolved
-    expansions the host tables are missing)."""
-    arena, states_out, n, esc, size_pre, sel, new_nodes = _fused_program(
-        cfg, variant, p, K, env, sim, bool(alternating),
-        trees, jnp.asarray(states), jnp.asarray(active, bool),
-        jnp.asarray(budget_left, jnp.int32))
-    n = int(n)
-    esc = int(esc)
-    expand = esc == ESC_EXPAND
-    disp = FusedDispatch(
-        n=n, escape=ESCAPE_NAMES[esc],
-        size_pre=np.asarray(jax.device_get(size_pre)),
-        sizes=np.asarray(jax.device_get(arena.size)),
-        states=np.asarray(jax.device_get(states_out)),
-        sel_dev=sel if expand else None,
-        sel_host=None, new_nodes=None)
-    if expand:
-        from repro.core.executor import _sel_to_host
-
-        disp.sel_host = _sel_to_host(sel)
-        disp.new_nodes = np.asarray(jax.device_get(new_nodes))
-    return arena, disp
+    expansions the host tables are missing).  Exactly
+    collect_supersteps(submit_supersteps(...)) — the blocking wrapper
+    over the overlap mode's split."""
+    arena, pend = submit_supersteps(
+        cfg, variant, trees, active, p, K, env, sim, states,
+        budget_left, alternating)
+    return arena, collect_supersteps(pend)

@@ -135,10 +135,20 @@ class ShardedExecutor:
                 for k in hosts[0]}
 
     def insert(self, active: np.ndarray, sel: ShardedSelection) -> np.ndarray:
+        return self.insert_host(self.insert_dev(active, sel))
+
+    def insert_dev(self, active: np.ndarray, sel: ShardedSelection) -> list:
+        """Queue every shard's insert before any host transfer; the
+        per-shard device id blocks come back as a list redeemed by
+        insert_host (the overlap mode's staged device half)."""
         acts = self._child_active(active)
-        outs = [child.insert(a, s) for (child, _, _), a, s
+        return [child.insert_dev(a, s) for (child, _, _), a, s
                 in zip(self.shards, acts, sel.parts)]
-        return self._gather_rows(outs, fill=NULL)
+
+    def insert_host(self, parts: list) -> np.ndarray:
+        return self._gather_rows(
+            [child.insert_host(p)
+             for (child, _, _), p in zip(self.shards, parts)], fill=NULL)
 
     def finalize(self, nodes, num_actions, terminal, prior_parent,
                  priors_fx):

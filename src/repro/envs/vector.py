@@ -29,6 +29,16 @@ both into one round-trip (each worker counts the action of the state it
 just stepped, in-process); the engine uses it when present
 (``has_fused_step``), and PoolVectorEnv implements it.  Bit-identical to
 the two-call form for any deterministic env.
+
+Asynchronous stepping: the overlap serving mode (service.pool gang
+pipeline) wants the pooled env batch IN FLIGHT while the main thread
+finishes another gang's superstep, so the fused call splits into
+``submit_batch`` (states pickled and posted to the workers ONCE, returns
+immediately with a handle) and ``collect`` (block on the posted chunks
+and concatenate).  ``step_and_count_batch`` is now exactly
+``collect(submit_batch(...))`` — the blocking compatibility wrapper —
+so the split costs one `batch_calls` round-trip like the fused call it
+replaces, and is bit-identical to it (pinned in tests/test_vector_env).
 """
 
 from __future__ import annotations
@@ -69,6 +79,14 @@ def has_fused_step(venv) -> bool:
     ``step_and_count_batch`` extension (one round-trip for step +
     legal-action count — PoolVectorEnv's IPC halving)."""
     return callable(getattr(venv, "step_and_count_batch", None))
+
+
+def has_async_step(venv) -> bool:
+    """True when `venv` implements the non-blocking ``submit_batch`` /
+    ``collect`` split of the fused step (the overlap serving mode's
+    host-side pipelining hook)."""
+    return (callable(getattr(venv, "submit_batch", None))
+            and callable(getattr(venv, "collect", None)))
 
 
 # --------------------------------------------------------------------------
@@ -113,6 +131,18 @@ def _pool_step_na_chunk(payload):
         na.append(_WORKER_ENV.num_actions(s2))
     return (np.stack(nxt), np.asarray(rew, np.float64),
             np.asarray(term, bool), np.asarray(na, np.int64))
+
+
+class PendingBatch:
+    """Handle for an in-flight submit_batch: the posted chunk futures, or
+    the already-computed result when the batch was small enough to step
+    inline (no IPC).  One-shot: collect() consumes it."""
+
+    __slots__ = ("futures", "result")
+
+    def __init__(self, futures=None, result=None):
+        self.futures = futures
+        self.result = result
 
 
 class PoolVectorEnv:
@@ -179,24 +209,43 @@ class PoolVectorEnv:
             _pool_na_chunk, [states[a:b] for a, b in spans]))
         return np.concatenate(out)
 
+    def submit_batch(self, states, actions) -> PendingBatch:
+        """Post the fused step + legal-action-count batch to the workers
+        WITHOUT waiting: the states are pickled and posted once, right
+        here, and the returned handle is redeemed later with collect().
+        One `batch_calls` round-trip, exactly like the blocking fused
+        call — the worker processes step their chunks while the caller's
+        thread does other work (the overlap serving mode's host half)."""
+        states = np.asarray(states)
+        actions = np.asarray(actions)
+        spans = self._chunks(len(states))
+        self.batch_calls += 1
+        if len(spans) <= 1:  # tiny batch: step inline, nothing in flight
+            _pool_init(self.env)
+            return PendingBatch(result=_pool_step_na_chunk((states, actions)))
+        pool = self._ensure_pool()
+        return PendingBatch(futures=[
+            pool.submit(_pool_step_na_chunk, (states[a:b], actions[a:b]))
+            for a, b in spans])
+
+    def collect(self, pending: PendingBatch):
+        """Block on a submit_batch handle and concatenate its chunks:
+        (next_states, rewards, terminal, num_actions).  Posts nothing —
+        the states already crossed the IPC boundary at submit time."""
+        if pending.result is not None:
+            out = [pending.result]
+        else:
+            out = [f.result() for f in pending.futures]
+        return tuple(np.concatenate([o[i] for o in out]) for i in range(4))
+
     def step_and_count_batch(self, states, actions):
         """Fused step + legal-action count: ONE pooled round-trip instead
         of step_batch followed by num_actions_batch (which pickles the
         freshly produced successor states back to the workers).  Returns
         (next_states, rewards, terminal, num_actions) — bit-identical to
-        the two-call form."""
-        states = np.asarray(states)
-        actions = np.asarray(actions)
-        spans = self._chunks(len(states))
-        self.batch_calls += 1
-        if len(spans) <= 1:
-            _pool_init(self.env)
-            out = [_pool_step_na_chunk((states, actions))]
-        else:
-            out = list(self._ensure_pool().map(
-                _pool_step_na_chunk,
-                [(states[a:b], actions[a:b]) for a, b in spans]))
-        return tuple(np.concatenate([o[i] for o in out]) for i in range(4))
+        the two-call form.  Compatibility wrapper over the non-blocking
+        submit_batch/collect split (same chunking, same single post)."""
+        return self.collect(self.submit_batch(states, actions))
 
     def close(self):
         if self._pool is not None:

@@ -105,6 +105,11 @@ class SearchHandle:
                and core.ticks - start < max_ticks):
             if not self._client.poll(1):
                 break
+        if wait and self.uid not in core.results:
+            # clock budget exhausted (or drained) with an overlap gang
+            # possibly still in flight: finish it without advancing the
+            # clock — its commits may be exactly this request's result
+            core.drain_inflight()
         res = core.results.get(self.uid)
         if res is None:
             if self.uid in core.expired_uids:
@@ -179,6 +184,14 @@ class SearchClient:
     while results stay bit-identical to n_shards=1 for every request.
     `shard_devices` pins the shard→device map (default:
     launch.mesh.serving_devices, round-robin over jax.devices()).
+
+    Overlap serving: `overlap=True` pipelines each pool's supersteps over
+    `n_gangs` double-buffered slot gangs — one gang's host expansion/
+    simulation runs while another's device phases are already dispatched
+    (service.pool, "Overlap mode").  Per-request results are unchanged;
+    clock-budget exits (result/run_until/drain) finish any in-flight gang
+    without advancing the clock past the budget.  Incompatible with
+    `compact_threshold > 0`.
     """
 
     def __init__(
@@ -198,6 +211,7 @@ class SearchClient:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        pool_workers: int = 2,
         supersteps_per_dispatch: int = 1,
         trace: Union[bool, Tracer] = False,
         metrics: Union[bool, MetricsRegistry] = False,
@@ -205,6 +219,8 @@ class SearchClient:
         result_ttl_ticks: Optional[int] = None,
         n_shards: int = 1,
         shard_devices: Optional[list] = None,
+        overlap: bool = False,
+        n_gangs: int = 2,
     ):
         self.tracer: Optional[Tracer] = (
             trace if isinstance(trace, Tracer)
@@ -221,11 +237,12 @@ class SearchClient:
             compact_threshold=compact_threshold,
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
-            expansion=expansion,
+            expansion=expansion, pool_workers=pool_workers,
             supersteps_per_dispatch=supersteps_per_dispatch,
             tracer=self.tracer, metrics=self.registry,
             result_ttl_ticks=result_ttl_ticks,
-            n_shards=n_shards, shard_devices=shard_devices)
+            n_shards=n_shards, shard_devices=shard_devices,
+            overlap=overlap, n_gangs=n_gangs)
         self._handles: dict[int, SearchHandle] = {}
 
     # ---- submission ----
@@ -270,6 +287,9 @@ class SearchClient:
         while not pred(self):
             if (self.core.ticks - start >= max_ticks
                     or not self.core.tick()):
+                # budget/drain exit: complete any in-flight overlap gang
+                # (no clock advance) before the final predicate check
+                self.core.drain_inflight()
                 return bool(pred(self))
         return True
 

@@ -53,6 +53,7 @@ class ServiceFrontend:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        pool_workers: int = 2,
         supersteps_per_dispatch: int = 1,
         policy: Union[str, SchedulePolicy] = "round-robin",
         retire_after_ticks: Optional[int] = None,
@@ -60,6 +61,8 @@ class ServiceFrontend:
         metrics=None,
         n_shards: int = 1,
         shard_devices: Optional[list] = None,
+        overlap: bool = False,
+        n_gangs: int = 2,
     ):
         self.client = SearchClient(
             env, sim, G=G, p=p, executor=executor, default_cfg=default_cfg,
@@ -68,11 +71,12 @@ class ServiceFrontend:
             compact_threshold=compact_threshold,
             compact_exit_threshold=compact_exit_threshold,
             persistent_compaction=persistent_compaction,
-            expansion=expansion,
+            expansion=expansion, pool_workers=pool_workers,
             supersteps_per_dispatch=supersteps_per_dispatch,
             trace=tracer if tracer is not None else False,
             metrics=metrics if metrics is not None else False,
-            n_shards=n_shards, shard_devices=shard_devices)
+            n_shards=n_shards, shard_devices=shard_devices,
+            overlap=overlap, n_gangs=n_gangs)
         self.core = self.client.core
 
     # ---- historical attribute surface (delegated) ----

@@ -88,6 +88,31 @@ Determinism: with a deterministic SimulationBackend the per-slot tree
 evolution is bit-identical to a single-tree TreeParallelMCTS run of the
 same request (tests/test_service.py) — scheduling changes WHEN a tree's
 supersteps happen, never what they compute.
+
+Overlap mode (`overlap=True`) — pipelined supersteps over double-buffered
+gangs (the paper's CPU/FPGA stage pipelining, ROADMAP item 3).  The
+lock-step superstep serializes host and device: while the
+ExpansionEngine / PoolVectorEnv IPC / SimulationBackend run on CPU the
+device is idle, and vice versa.  Overlap splits each pool's slots into
+`n_gangs` fixed gangs (GangSchedule; gangs partition WITHIN each shard,
+so D-sharding composes) and double-buffers: each `begin_superstep` tick
+(1) stages the NEXT gang's device half (Selection + Node Insertion,
+dispatched async — no host read), (2) collects the IN-FLIGHT gang's
+posted expansion batch, and (3) promotes the staged gang — blocking
+device readbacks, by then complete, plus the `expand_submit` IPC post —
+so that gang's env workers step while the caller evaluates and finishes
+the collected gang.  Legality: every device phase is masked per slot and
+per-slot arithmetic is position-independent, so interleaving DISJOINT
+gangs' phases computes each slot's trajectory bit-identically to
+lock-step — overlap changes wall-clock concurrency, never per-request
+results (pinned by tests/test_executor_matrix.py overlap legs).  The
+clock ticks when a gang superstep begins; `drain_overlap()` completes an
+in-flight gang WITHOUT advancing the clock (budget-bound contract), and
+runs before any cancel/eviction frees an active slot.  Overlap is
+incompatible with active-slot compaction (two gangs in flight would race
+the session sub-arena) and composes with fused K-dispatch: per tick one
+gang's fused program is submitted (`run_supersteps_submit`) while the
+previous gang's escape/accounting runs on host.
 """
 
 from __future__ import annotations
@@ -200,6 +225,71 @@ class _PendingStep:
     #                              its `ex` is a shard child, not a sub)
 
 
+class GangSchedule:
+    """Fixed partition of the G slots into `n_gangs` gangs plus the
+    round-robin staging order.  Gangs partition WITHIN each shard
+    (contiguous runs of the shard's slots), so every gang keeps balanced
+    per-device batches at D > 1.  The schedule is a pure function of
+    (G, n_gangs, shard_G) and the occupancy sequence — fixed schedule =>
+    deterministic replay (the executor-matrix overlap leg)."""
+
+    def __init__(self, G: int, n_gangs: int, shard_G: Optional[int] = None):
+        shard_G = G if shard_G is None else int(shard_G)
+        self.n_gangs = max(1, min(int(n_gangs), shard_G))
+        self.gang_of = np.array(
+            [(g % shard_G) * self.n_gangs // shard_G for g in range(G)],
+            np.int64)
+        self.cursor = 0   # round-robin position of the next stage
+
+    def mask(self, gang: int) -> np.ndarray:
+        return self.gang_of == gang
+
+    def next_gang(self, active: np.ndarray,
+                  exclude: Optional[int] = None) -> Optional[int]:
+        """Next gang (round-robin from the cursor) holding at least one
+        active slot, skipping `exclude` (the in-flight gang).  None when
+        no other gang has work."""
+        for i in range(self.n_gangs):
+            cand = (self.cursor + i) % self.n_gangs
+            if cand == exclude:
+                continue
+            if bool((active & (self.gang_of == cand)).any()):
+                self.cursor = (cand + 1) % self.n_gangs
+                return cand
+        return None
+
+
+@dataclasses.dataclass
+class _StagedGang:
+    """A gang whose device half (Selection + Node Insertion) is
+    dispatched but not yet read back — the double buffer's async leg."""
+
+    gang: int
+    ex_active: np.ndarray        # [G] gang-restricted active mask
+    act_idx: np.ndarray          # occupied slots of this gang
+    sel_dev: object
+    new_nodes_dev: object        # device id block (executor insert_dev)
+    t0: float
+    tok: object = None           # open "superstep" span on the gang track
+
+
+@dataclasses.dataclass
+class _InflightGang:
+    """A promoted gang: device results read back, host expansion batch
+    POSTED to the env workers (expand_submit) and running concurrently
+    with whatever the main thread does next.  _collect_inflight blocks
+    on it and builds the ordinary _PendingStep."""
+
+    gang: int
+    ex_active: np.ndarray
+    act_idx: np.ndarray
+    sel_dev: object
+    pexp: object                 # core.expand.PendingExpansion
+    t_intree: float
+    t_submit: float
+    tok: object = None
+
+
 @dataclasses.dataclass
 class ServiceStats:
     supersteps: int = 0
@@ -290,6 +380,8 @@ class ArenaPool:
         metrics=None,
         n_shards: int = 1,
         shard_devices: Optional[list] = None,
+        overlap: bool = False,
+        n_gangs: int = 2,
     ):
         self.cfg, self.env, self.sim = cfg, env, sim
         self.G, self.p = G, p
@@ -399,6 +491,39 @@ class ArenaPool:
         # the phase-by-phase path — the oracle the fused path is
         # differential-tested against.
         self.supersteps_per_dispatch = max(1, int(supersteps_per_dispatch))
+        # overlap mode: pipelined supersteps over double-buffered gangs
+        # (module docstring, "Overlap mode").  Incompatible with active-
+        # slot compaction: a resident session sub-arena cannot track two
+        # gangs in flight.
+        self.overlap = bool(overlap)
+        self.n_gangs = max(1, int(n_gangs))
+        if self.overlap and compact_threshold > 0.0:
+            raise ValueError(
+                "overlap=True is incompatible with active-slot compaction "
+                "(compact_threshold > 0): a resident session sub-arena "
+                "would go stale under two gangs in flight")
+        self.gangs = (GangSchedule(G, self.n_gangs, self.shard_G)
+                      if self.overlap else None)
+        self._inflight: Optional[_InflightGang] = None
+        self._inflight_fused: Optional[dict] = None
+        self._gang_tids: dict = {}
+        # overlap busy-ratio bookkeeping: wall seconds of overlap ticks,
+        # and how much of them the main thread spent BLOCKED on the env
+        # workers (host side) / on device readbacks (device side)
+        self._ov_wall = 0.0
+        self._ov_wait_host = 0.0
+        self._ov_wait_dev = 0.0
+        if self.overlap:
+            self._m_busy_host = reg.gauge(
+                "service_overlap_busy_ratio",
+                "fraction of overlap-tick wall the main thread was not "
+                "blocked, by waiting side", bucket=label, side="host")
+            self._m_busy_dev = reg.gauge(
+                "service_overlap_busy_ratio", bucket=label, side="device")
+            self._m_ov_eff = reg.histogram(
+                "service_overlap_efficiency",
+                "per-tick percent of wall not spent blocked on env "
+                "workers or device readbacks", bucket=label)
         # fixed per-slot finalize width (vmapped finalize needs one shape)
         self.K = p * cfg.Fp if cfg.expand_all else p
 
@@ -553,6 +678,15 @@ class ArenaPool:
                 return True
         for g, slot in enumerate(self.slots):
             if slot is not None and slot.req.uid == uid:
+                # an in-flight gang holding this slot must finish first:
+                # its applied selection/insertion reference the slot, and
+                # freeing it mid-pipeline would strand virtual losses and
+                # crash the gang's _commit_moves
+                if self.overlap:
+                    self.drain_overlap()
+                    if self.slots[g] is None or self.slots[g].req.uid != uid:
+                        # the drained superstep completed this request
+                        return True
                 # freeing the slot is a membership change: a resident
                 # session spanning it must scatter + close first
                 self._invalidate_session(g)
@@ -691,12 +825,152 @@ class ArenaPool:
                     np.arange(A), act_idx)
         return self.exec, active, act_idx, act_idx
 
+    # ---- overlap pipeline (double-buffered gangs) ----
+    def _gang_track(self, gang: int) -> int:
+        """Per-gang Perfetto track: gang supersteps interleave, so each
+        gang's spans nest on its own timeline."""
+        tid = self._gang_tids.get(gang)
+        if tid is None:
+            tid = self.trace.track(
+                f"pool:{bucket_label(self.cfg)}:gang{gang}")
+            self._gang_tids[gang] = tid
+        return tid
+
+    def _stage(self, gang: int, active: np.ndarray) -> _StagedGang:
+        """Dispatch one gang's device half (Selection + Node Insertion)
+        WITHOUT reading anything back: JAX async dispatch queues the
+        programs and returns; the blocking readbacks wait until
+        _promote."""
+        t0 = time.perf_counter()
+        gmask = active & self.gangs.mask(gang)
+        act_idx = np.flatnonzero(gmask)
+        tid = self._gang_track(gang)
+        tok = self.trace.begin("superstep", cat="phase", tid=tid,
+                               tick=self._now(), gang=gang,
+                               slots=len(act_idx))
+        with self.trace.span("select", cat="phase", tid=tid,
+                             slots=len(act_idx), gang=gang):
+            sel_dev = self.exec.selection(gmask, self.p)
+            new_dev = self.exec.insert_dev(gmask, sel_dev)
+            if self.trace.enabled:
+                self.exec.block()   # honesty rule: fence only when tracing
+        return _StagedGang(gang=gang, ex_active=gmask, act_idx=act_idx,
+                           sel_dev=sel_dev, new_nodes_dev=new_dev,
+                           t0=t0, tok=tok)
+
+    def _promote(self, st: _StagedGang) -> _InflightGang:
+        """Staged -> in-flight: blocking device readbacks (selection +
+        inserted ids, complete by now) and the expansion-batch POST.
+        From here the gang's env workers step concurrently with whatever
+        the main thread does next (evaluate/finish of another gang)."""
+        t0 = time.perf_counter()
+        sel = self.exec.sel_to_host(st.sel_dev)
+        new_nodes = self.exec.insert_host(st.new_nodes_dev)
+        t_dev = time.perf_counter() - t0
+        self._ov_wait_dev += t_dev
+        pexp = self.expander.expand_submit(
+            [(g, self.sts[g], {k: v[g] for k, v in sel.items()},
+              new_nodes[g]) for g in st.act_idx],
+            tid=self._gang_tids.get(st.gang, self._track))
+        t1 = time.perf_counter()
+        # in-tree wall ~= the blocking device readback; the dispatch
+        # itself returned immediately at stage time
+        return _InflightGang(gang=st.gang, ex_active=st.ex_active,
+                             act_idx=st.act_idx, sel_dev=st.sel_dev,
+                             pexp=pexp, t_intree=t_dev,
+                             t_submit=(t1 - t0) - t_dev, tok=st.tok)
+
+    def _collect_inflight(self) -> _PendingStep:
+        """Block on the in-flight gang's posted expansion batch and build
+        the ordinary _PendingStep the caller evaluates and finishes."""
+        inf, self._inflight = self._inflight, None
+        t0 = time.perf_counter()
+        hx = self.expander.expand_collect(
+            inf.pexp, tid=self._gang_tids.get(inf.gang, self._track))
+        t_wait = time.perf_counter() - t0
+        self._ov_wait_host += t_wait
+        self.stats.t_expand += inf.t_submit + t_wait
+        sim_states = np.concatenate([hx[g].sim_states for g in inf.act_idx])
+        return _PendingStep(
+            ex=self.exec, ex_active=inf.ex_active, rows=inf.act_idx,
+            act_idx=inf.act_idx, sel_dev=inf.sel_dev, hx=hx,
+            sim_states=sim_states, t_intree=inf.t_intree,
+            t_host=inf.t_submit + t_wait, tok=inf.tok, compacted=False)
+
+    def _begin_overlap(self) -> Optional[_PendingStep]:
+        """One overlap tick: stage + promote the next gang (device half
+        dispatched, expansion batch posted), then collect the in-flight
+        gang.  Returns the collected gang's pending step (exactly one per
+        tick, like lock-step); with a single active gang the pipeline
+        self-drains each tick and degenerates to lock-step."""
+        if self._inflight_fused is not None:
+            # mode switch (a scheduler deadline cap dropped K to 1):
+            # finish the staged fused gang before pipelining phase-path
+            # gangs, or the same slots could select twice concurrently
+            self.drain_overlap()
+        self.stats.ticks += 1
+        t_tick0 = time.perf_counter()
+        self._admit()
+        self._m_queue.set(len(self.queue))
+        active = self._active()
+        self._m_active.set(int(active.sum()))
+        if not active.any():
+            # an in-flight gang implies occupied slots, so the pipeline
+            # is necessarily empty here
+            return None
+        if self._inflight is None:   # warm-up: fill the double buffer
+            self._inflight = self._promote(
+                self._stage(self.gangs.next_gang(active), active))
+        # stage AND promote the next gang before blocking on the
+        # in-flight IPC: the promoted gang's expansion batch then runs in
+        # the env workers across the in-flight gang's entire collect wait
+        # plus the caller's evaluate + finish — the widest window the
+        # tick can offer.  (Promoting after the collect would shrink the
+        # window to evaluate + finish alone and expose most of the IPC
+        # wait; the data dependencies are identical either way, since
+        # promote never touches the in-flight gang's slots.)
+        nxt = self.gangs.next_gang(active, exclude=self._inflight.gang)
+        promoted = None if nxt is None else self._promote(
+            self._stage(nxt, active))
+        pend = self._collect_inflight()
+        self._inflight = promoted
+        wall = time.perf_counter() - t_tick0
+        self._ov_wall += wall
+        if self._ov_wall > 0:
+            self._m_busy_host.set(1.0 - self._ov_wait_host / self._ov_wall)
+            self._m_busy_dev.set(1.0 - self._ov_wait_dev / self._ov_wall)
+        self._m_ov_eff.observe(100.0 * max(
+            0.0, 1.0 - (self._ov_wait_host + self._ov_wait_dev)
+            / max(self._ov_wall, 1e-12)))
+        return pend
+
+    def drain_overlap(self) -> int:
+        """Complete any in-flight gang WITHOUT advancing the clock: the
+        budget-bound contract (run/result/run_until max_ticks) and every
+        path that frees an active slot (cancel, deadline eviction, close)
+        must not leave a gang's applied selection/insertion unfinished.
+        Returns the number of supersteps completed (0 when idle)."""
+        n = 0
+        inf_f, self._inflight_fused = self._inflight_fused, None
+        if inf_f is not None:
+            n = max(n, self._fused_collect_gang(inf_f))
+        if self._inflight is not None:
+            pend = self._collect_inflight()
+            with self.trace.span("simulate", cat="phase", tid=self._track,
+                                 rows=len(pend.sim_states), drain=True):
+                values, priors = self.sim.evaluate(pend.sim_states)
+            self.finish_superstep(pend, values, priors)
+            n += 1
+        return n
+
     # ---- superstep, paused at the Simulation boundary ----
     def begin_superstep(self) -> Optional[_PendingStep]:
         """Admission + Selection + Insertion + host expansion.  Returns
         the pending step carrying the fused simulation rows, or None when
         no slot is occupied.  The caller evaluates the rows (alone or
         fused with other pools') and hands them to finish_superstep."""
+        if self.overlap:
+            return self._begin_overlap()
         self.stats.ticks += 1
         tok = self.trace.begin("superstep", cat="phase", tid=self._track,
                                tick=self._now())
@@ -888,6 +1162,8 @@ class ArenaPool:
             K = min(K, max(1, int(max_supersteps)))
         if K <= 1 or not self.fused_capable():
             return 1 if self.superstep() else 0
+        if self.overlap:
+            return self._fused_overlap_tick(K)
         self.stats.ticks += 1
         tok = self.trace.begin("fused-dispatch", cat="phase",
                                tid=self._track, tick=self._now(), k=K)
@@ -946,11 +1222,20 @@ class ArenaPool:
         the sharded path, where the caller's loop holds one span over
         all shards)."""
         t0 = time.perf_counter()
-        A, p = len(act_idx), self.p
+        budget_left, states, start_size = self._fused_upload(
+            ex, rows, act_idx)
+        disp = ex.run_supersteps(ex_active, self.p, K, self.env, self.sim,
+                                 states, budget_left,
+                                 self.alternating_signs)
+        return self._fused_finish_one(ex, ex_active, rows, act_idx, disp,
+                                      start_size, on_sub, tok, t0)
+
+    def _fused_upload(self, ex, rows, act_idx):
+        """Host half of a fused dispatch's inputs: per-row remaining move
+        budgets + ONE upload of the dispatched rows' ST images; the
+        buffer stays device-resident for the whole dispatch (fused
+        supersteps cost zero H2D copies)."""
         Ge = ex.G
-        # per-row remaining move budgets + ONE upload of the dispatched
-        # rows' ST images; the buffer stays device-resident for the
-        # whole dispatch (fused supersteps cost zero H2D copies)
         budget_left = np.zeros(Ge, np.int32)
         states = np.zeros((Ge, self.cfg.X) + tuple(self.env.state_shape),
                           self.env.state_dtype)
@@ -960,9 +1245,14 @@ class ArenaPool:
             budget_left[r] = slot.req.budget - slot.move_supersteps
             states[r] = self.sts[g].data
             start_size[r] = slot.prev_size
-        disp = ex.run_supersteps(ex_active, p, K, self.env, self.sim,
-                                 states, budget_left,
-                                 self.alternating_signs)
+        return budget_left, states, start_size
+
+    def _fused_finish_one(self, ex, ex_active, rows, act_idx, disp,
+                          start_size, on_sub: bool, tok, t0: float) -> int:
+        """Accounting + escape handling for one collected fused dispatch
+        (the post-device half of _fused_dispatch_one; the overlap path
+        reaches it through run_supersteps_submit/collect instead)."""
+        A, p = len(act_idx), self.p
         n = disp.n
         t1 = time.perf_counter()
         self.stats.fused_dispatches += 1
@@ -1044,6 +1334,97 @@ class ArenaPool:
         self._commit_moves(act_idx)
         if tok is not None:
             self.trace.end(tok)
+        return n
+
+    # ---- fused x overlap: double-buffered K-superstep dispatches ----
+    def _fused_submit_gang(self, gang: int, active: np.ndarray,
+                           K: int) -> dict:
+        """Queue one gang's fused dispatch per owning shard WITHOUT any
+        host read (executor run_supersteps_submit): the device programs
+        run while the previous gang's collect/escape/accounting holds
+        the main thread."""
+        gmask = active & self.gangs.mask(gang)
+        act_idx = np.flatnonzero(gmask)
+        shards = getattr(self.exec, "shards", None) \
+            or [(self.exec, 0, self.G)]
+        parts = []
+        for child, lo, n_run in shards:
+            in_shard = (act_idx >= lo) & (act_idx < lo + n_run)
+            if not in_shard.any():
+                continue
+            c_idx = act_idx[in_shard]
+            c_rows = c_idx - lo
+            c_active = np.zeros(child.G, bool)
+            c_active[c_rows] = True
+            budget_left, states, start_size = self._fused_upload(
+                child, c_rows, c_idx)
+            t0 = time.perf_counter()
+            pend = child.run_supersteps_submit(
+                c_active, self.p, K, self.env, self.sim, states,
+                budget_left, self.alternating_signs)
+            parts.append(dict(child=child, c_active=c_active, rows=c_rows,
+                              act_idx=c_idx, start_size=start_size,
+                              pend=pend, t0=t0))
+        self.trace.instant("fused-stage", cat="phase",
+                           tid=self._gang_track(gang), gang=gang, k=K,
+                           slots=len(act_idx))
+        return {"gang": gang, "parts": parts}
+
+    def _fused_collect_gang(self, inf: dict) -> int:
+        """Block on a staged gang's per-shard fused dispatches and run
+        the ordinary accounting/escape body for each.  Returns the tick's
+        superstep count (max over shards, as in the classic sharded
+        path)."""
+        ns = [0]
+        for part in inf["parts"]:
+            t_c0 = time.perf_counter()
+            disp = part["child"].run_supersteps_collect(part["pend"])
+            self._ov_wait_dev += time.perf_counter() - t_c0
+            ns.append(self._fused_finish_one(
+                part["child"], part["c_active"], part["rows"],
+                part["act_idx"], disp, part["start_size"],
+                on_sub=False, tok=None, t0=part["t0"]))
+        return max(ns)
+
+    def _fused_overlap_tick(self, K: int) -> int:
+        """Overlap tick for K > 1: submit the next gang's fused programs,
+        then collect + account the in-flight gang's — its host half runs
+        while the freshly submitted programs execute on device."""
+        if self._inflight is not None:   # mode switch: K rose above 1
+            self.drain_overlap()
+        self.stats.ticks += 1
+        t_tick0 = time.perf_counter()
+        tok = self.trace.begin("fused-dispatch", cat="phase",
+                               tid=self._track, tick=self._now(), k=K,
+                               overlap=True)
+        self._admit()
+        self._m_queue.set(len(self.queue))
+        active = self._active()
+        self._m_active.set(int(active.sum()))
+        if not active.any():
+            self.trace.end(tok)
+            return 0
+        self.last_decision = {
+            "A": int(active.sum()), "G": self.G,
+            "occupancy": float(active.sum()) / self.G, "compacted": False,
+            "G_exec": self.G, "session": None,
+        }
+        if self._inflight_fused is None:   # warm-up
+            self._inflight_fused = self._fused_submit_gang(
+                self.gangs.next_gang(active), active, K)
+        nxt = self.gangs.next_gang(active,
+                                   exclude=self._inflight_fused["gang"])
+        staged = None if nxt is None \
+            else self._fused_submit_gang(nxt, active, K)
+        inf, self._inflight_fused = self._inflight_fused, None
+        n = self._fused_collect_gang(inf)
+        self._inflight_fused = staged
+        self.trace.end(tok)
+        wall = time.perf_counter() - t_tick0
+        self._ov_wall += wall
+        if self._ov_wall > 0:
+            self._m_busy_host.set(1.0 - self._ov_wait_host / self._ov_wall)
+            self._m_busy_dev.set(1.0 - self._ov_wait_dev / self._ov_wall)
         return n
 
     # ---- move boundary: commit / advance / evict ----
@@ -1133,11 +1514,15 @@ class ArenaPool:
                     break
             elif not self.superstep():
                 break
+        if self.overlap:   # budget exit can leave a gang in flight
+            self.drain_overlap()
         return self.completed
 
     def close(self):
-        """Flush any resident session and release expansion-engine
-        resources (process pool, if any)."""
+        """Flush any in-flight gang and resident session, and release
+        expansion-engine resources (process pool, if any)."""
+        if self.overlap and not self.retired:
+            self.drain_overlap()
         self._close_session()
         if self._owns_expander:
             self.expander.close()

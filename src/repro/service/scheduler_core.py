@@ -284,12 +284,15 @@ class SchedulerCore:
         compact_exit_threshold: Optional[float] = None,
         persistent_compaction: bool = True,
         expansion: str = "loop",
+        pool_workers: int = 2,
         supersteps_per_dispatch: int = 1,
         tracer=None,
         metrics=None,
         result_ttl_ticks: Optional[int] = None,
         n_shards: int = 1,
         shard_devices: Optional[list] = None,
+        overlap: bool = False,
+        n_gangs: int = 2,
     ):
         self.env, self.sim = env, sim
         self.G, self.p = G, p
@@ -333,6 +336,12 @@ class SchedulerCore:
         # device-agnostic
         self.n_shards = max(1, int(n_shards))
         self.shard_devices = shard_devices
+        # overlap serving: every pool pipelines its supersteps over
+        # n_gangs double-buffered gangs (service.pool, "Overlap mode");
+        # tick()/begin_superstep stay call-compatible, and drain_inflight
+        # completes in-flight gangs when a clock budget stops the loop
+        self.overlap = bool(overlap)
+        self.n_gangs = max(1, int(n_gangs))
         self._pool_kw = dict(
             alternating_signs=alternating_signs,
             reuse_subtree=reuse_subtree,
@@ -342,11 +351,16 @@ class SchedulerCore:
             supersteps_per_dispatch=supersteps_per_dispatch,
             n_shards=self.n_shards,
             shard_devices=shard_devices,
+            overlap=self.overlap,
+            n_gangs=self.n_gangs,
         )
         # ONE host-expansion engine (and process pool, in "pool" mode)
-        # shared by every bucket
-        self.expander = ExpansionEngine(env, expansion, tracer=tracer,
-                                        metrics=metrics)
+        # shared by every bucket.  pool_workers sizes that process pool —
+        # latency-bound envs (RPC/simulator-call transitions) want more
+        # workers than cores, CPU-bound envs want ~core count
+        self.expander = ExpansionEngine(env, expansion,
+                                        pool_workers=pool_workers,
+                                        tracer=tracer, metrics=metrics)
         self.pools: dict = {}
         self._order: list = []          # bucket keys in creation order
         self.last_key = None            # bucket of the latest superstep
@@ -579,7 +593,24 @@ class SchedulerCore:
         start = self.ticks
         while self.ticks - start < max_ticks and self.tick():
             pass
+        # a clock-budget exit can leave overlap gangs in flight; finish
+        # them WITHOUT advancing the clock past the budget
+        self.drain_inflight()
         return self.completed
+
+    def drain_inflight(self) -> int:
+        """Complete every pool's in-flight overlap gang without advancing
+        the global clock (the budget-bound contract of run/result/
+        run_until, extended to pipelined gangs).  Returns the number of
+        drained supersteps; 0 when overlap is off or nothing is in
+        flight."""
+        if not self.overlap:
+            return 0
+        n = 0
+        for pool in self.pools.values():
+            if not pool.retired:
+                n += pool.drain_overlap()
+        return n
 
     # ---- aggregate views ----
     @property

@@ -657,6 +657,97 @@ def test_result_max_ticks_bounds_clock_under_fused_dispatch():
 
 
 # ---------------------------------------------------------------------------
+# overlap mode: budget exits drain the in-flight gang WITHOUT ticks
+# ---------------------------------------------------------------------------
+
+def _no_inflight(cl):
+    return all(p._inflight is None and p._inflight_fused is None
+               for p in cl.core.pools.values() if not p.retired)
+
+
+def test_run_max_ticks_drains_inflight_gang_within_budget():
+    """Regression (extends the PR 8 clock-bound fix to overlap): when
+    run(max_ticks) expires mid-pipeline, the in-flight gang's applied
+    selection/insertion must be completed — but by drain_overlap, which
+    advances NO ticks, so the clock stays within the stated budget."""
+    cl = _client(G=2, overlap=True)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=60, moves=2))
+    cl.core.run(max_ticks=6)
+    assert cl.core.ticks <= 6           # phase-path ticks are exactly 1
+    assert _no_inflight(cl)             # ...and nothing was left applied
+    assert cl.stats.supersteps > 0
+    cl.close()
+
+
+def test_result_max_ticks_drains_inflight_gang():
+    """Same contract on the handle: result(max_ticks) exhausting its
+    budget under overlap raises, stays within the clock bound, and
+    leaves no gang in flight (its superstep completed tick-free)."""
+    cl = _client(G=2, overlap=True)
+    h = cl.submit(SearchRequest(uid=0, seed=0, budget=200, moves=4))
+    with pytest.raises(RuntimeError, match="no result"):
+        h.result(max_ticks=8)
+    assert cl.core.ticks <= 8
+    assert _no_inflight(cl)
+    cl.close()
+
+
+def test_run_until_budget_exit_drains_inflight_gang():
+    """run_until's budget/drain exit calls drain_inflight before the
+    final predicate check — the predicate observes a consistent pool."""
+    cl = _client(G=2, overlap=True)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=100, moves=3))
+    assert cl.run_until(lambda c: False, max_ticks=5) is False
+    assert cl.core.ticks <= 5
+    assert _no_inflight(cl)
+    cl.close()
+
+
+def test_run_max_ticks_bounds_clock_under_fused_overlap():
+    """Overlap composes with the fused K-dispatch clock rule: one
+    overlap tick collects the PREVIOUS gang's K-superstep dispatch, so
+    the clock may overshoot by at most one dispatch — and the staged
+    gang left in flight at budget expiry is drained tick-free."""
+    cl = _client(G=2, overlap=True, supersteps_per_dispatch=4)
+    cl.submit(SearchRequest(uid=0, seed=0, budget=60, moves=2))
+    cl.core.run(max_ticks=8)
+    assert cl.stats.fused_dispatches > 0
+    assert cl.core.ticks < 8 + 4
+    assert _no_inflight(cl)
+    cl.close()
+
+
+def test_overlap_results_match_lockstep_through_client():
+    """The handle API returns bit-identical results with overlap on —
+    gangs reschedule WHEN slots advance, never WHAT they compute."""
+    reqs = [dict(uid=i, seed=i, budget=3 + i % 3, moves=1 + i % 2)
+            for i in range(5)]
+
+    def go(**kw):
+        cl = _client(G=2, **kw)
+        try:
+            hs = [cl.submit(SearchRequest(**r)) for r in reqs]
+            return {h.uid: h.result() for h in hs}
+        finally:
+            cl.close()
+
+    want = go()
+    got = go(overlap=True, n_gangs=2)
+    for uid in want:
+        _assert_result_equal(got[uid], want[uid], f"overlap uid={uid}")
+
+
+def test_overlap_rejects_compaction():
+    """Overlap pins slot rows while a gang is in flight — combining it
+    with compaction (which moves rows) must fail loudly at build time."""
+    with pytest.raises(ValueError, match="compact"):
+        cl = _client(G=2, overlap=True, compact_threshold=0.5)
+        cl.submit(SearchRequest(uid=0, seed=0, budget=2))
+        cl.poll(1)
+        cl.close()
+
+
+# ---------------------------------------------------------------------------
 # stats: monotonic ticks + wait histogram
 # ---------------------------------------------------------------------------
 

@@ -481,3 +481,144 @@ def test_sharded_fused_dispatch_bit_identical(executor, n_shards):
     got = _run_sharded(executor, n_shards, k=4)
     _assert_requests_identical(got, _shard_base(executor, k=4),
                                f"shard-fused/{executor}/D={n_shards}")
+
+
+# ---------------------------------------------------------------------------
+# overlap mode (service/pool.py GangSchedule): pipelined supersteps.
+# Double-buffered gangs reschedule WHEN each slot's superstep runs — one
+# gang's host expansion/simulation overlaps the next gang's device
+# in-tree phases — but per-slot arithmetic is position-independent and
+# gangs partition the slot axis, so every request's trajectory (actions,
+# rewards, visit counts, per-request superstep count, final tree) must
+# stay bit-identical to the lock-step run on the SAME executor.  The
+# gang schedule is a pure function of (G, n_gangs, shard partition) and
+# occupancy, so a replay is deterministic by construction.
+# ---------------------------------------------------------------------------
+
+def _run_overlap(executor, n_gangs=2, k=1, n_shards=1, overlap=True):
+    """The matrix schedule through an overlap-mode client (same G/CFG as
+    the sharded legs, so _shard_base supplies the lock-step oracle)."""
+    cl = SearchClient(ENV, BanditValueBackend(), G=SHARD_G, p=P,
+                      executor=executor, default_cfg=CFG,
+                      overlap=overlap, n_gangs=n_gangs,
+                      supersteps_per_dispatch=k, n_shards=n_shards)
+    try:
+        handles = [cl.submit(SearchRequest(cfg=CFG, **kw))
+                   for kw in _SCHEDULE]
+        done = {h.uid: h.result() for h in handles}
+        (pool,) = cl.core.pools.values()
+        if overlap:
+            assert pool.overlap and pool.gangs.n_gangs == n_gangs
+            # a drained pool may not hold a half-finished gang
+            assert pool._inflight is None
+            assert pool._inflight_fused is None
+            if k > 1 and executor in FUSED_EXECUTORS:
+                assert pool.stats.fused_dispatches > 0
+    finally:
+        cl.close()
+    return done
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+def test_overlap_bit_identical_to_lockstep(executor):
+    """Acceptance: overlap=True returns bit-identical per-request
+    results to the same client at overlap=False, on EVERY executor —
+    including relaxed/wavefront, whose intra-superstep semantics differ
+    from the oracle but are still per-slot deterministic."""
+    got = _run_overlap(executor)
+    _assert_requests_identical(got, _shard_base(executor),
+                               f"overlap/{executor}")
+
+
+def test_overlap_gang_count_is_semantics_free():
+    """n_gangs only re-phases the pipeline: a 3-gang (and 4-gang, i.e.
+    one slot per gang at G=4) run equals the 2-gang and lock-step runs."""
+    for n_gangs in (3, 4):
+        _assert_requests_identical(
+            _run_overlap("faithful", n_gangs=n_gangs),
+            _shard_base("faithful"), f"overlap/faithful/gangs={n_gangs}")
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+def test_overlap_off_is_bit_identical_on_every_executor(executor):
+    """Acceptance: the overlap refactor (insert_dev/insert_host split,
+    submit/collect expansion, staged fused dispatch) left the default
+    overlap=False path bit-identical — pinned explicitly per executor,
+    not just via the legacy suites."""
+    got = _run_overlap(executor, overlap=False)
+    _assert_requests_identical(got, _shard_base(executor),
+                               f"overlap-off/{executor}")
+
+
+def test_overlap_deterministic_replay():
+    """Acceptance: the gang schedule is fixed, so an overlap run is
+    exactly reproducible — two fresh clients produce identical results
+    AND identical per-request superstep counts (same interleaving)."""
+    a = _run_overlap("faithful")
+    b = _run_overlap("faithful")
+    _assert_requests_identical(a, b, "overlap-replay")
+
+
+@pytest.mark.parametrize("executor", ["reference", "faithful", "pallas"])
+@pytest.mark.parametrize("n_shards", [1, 2], ids=["d1", "d2"])
+def test_overlap_sharded_bit_identical(executor, n_shards):
+    """Acceptance: overlap composes with D-sharding — gang masks
+    partition WITHIN shard runs (gang_of interleaves slots round-robin
+    inside each shard), so a D=2 overlap run equals the D=1 lock-step
+    run per request.  The CI leg with
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 places the
+    shards on real separate devices."""
+    got = _run_overlap(executor, n_shards=n_shards)
+    _assert_requests_identical(got, _shard_base(executor),
+                               f"overlap-shard/{executor}/D={n_shards}")
+
+
+@pytest.mark.parametrize("executor", FUSED_EXECUTORS)
+def test_overlap_fused_dispatch_bit_identical(executor):
+    """Acceptance: overlap composes with the fused K-superstep path —
+    one gang's device programs run while the previous gang's collect /
+    escape / accounting holds the host — and stays bit-identical to the
+    lock-step fused run."""
+    got = _run_overlap(executor, k=4)
+    _assert_requests_identical(got, _shard_base(executor, k=4),
+                               f"overlap-fused/{executor}")
+
+
+def test_overlap_fused_sharded_composes():
+    """All three axes at once: D=2 shards x K=4 fused dispatch x 2-gang
+    overlap still equals the plain D=1 K=4 run per request."""
+    got = _run_overlap("faithful", k=4, n_shards=2)
+    _assert_requests_identical(got, _shard_base("faithful", k=4),
+                               "overlap-fused-shard/faithful")
+
+
+def test_overlap_trace_exposes_gang_tracks():
+    """The obs satellite: an overlap run with tracing on emits per-gang
+    timeline tracks and the busy-ratio/efficiency overlap metrics, and
+    tracing still never changes WHAT is computed."""
+    from repro.obs import MetricsRegistry, Tracer
+
+    cl = SearchClient(ENV, BanditValueBackend(), G=SHARD_G, p=P,
+                      executor="faithful", default_cfg=CFG,
+                      overlap=True, expansion="vector", trace=Tracer(),
+                      metrics=MetricsRegistry())
+    try:
+        handles = [cl.submit(SearchRequest(cfg=CFG, **kw))
+                   for kw in _SCHEDULE]
+        done = {h.uid: h.result() for h in handles}
+        trace = cl.trace_export()
+        metrics = cl.metrics()
+    finally:
+        cl.close()
+    _assert_requests_identical(done, _shard_base("faithful"),
+                               "overlap-traced/faithful")
+    tracks = {e["args"]["name"] for e in trace["traceEvents"]
+              if e.get("name") == "thread_name"}
+    gang_tracks = {t for t in tracks if ":gang" in t}
+    assert len(gang_tracks) >= 2, tracks   # one per pipelined gang
+    names = {e["name"] for e in trace["traceEvents"]}
+    # the async split renames the expansion phase into its two halves
+    assert {"superstep", "select", "expand-submit", "expand-collect",
+            "simulate"} <= names
+    assert "service_overlap_busy_ratio" in metrics
+    assert "service_overlap_efficiency" in metrics
