@@ -2,8 +2,15 @@
 
 Replicates the paper's Gomoku setup: 6x6 board, expand-all, PUCT with a
 policy-value network as the Simulation phase — then closes the loop by
-training the network on the self-play targets (AlphaZero-style), i.e. the
-paper's system embedded in its intended application.
+training the network on the self-play targets (AlphaZero-style).
+
+Served through the full client stack: every game is one multi-move
+SearchRequest on a SearchClient, the G game slots run concurrently in
+one arena, and the network runs behind the sim-serving subsystem
+(repro.sim) — a SimServer microbatches all slots' inference rows into
+fixed-shape batches (the paper Fig. 5 batching) at priority class
+"self-play", with a transposition cache in front so re-expanded
+positions skip inference entirely.
 
   PYTHONPATH=src python examples/gomoku_selfplay.py --games 2 --p 8
 """
@@ -14,37 +21,51 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import TreeConfig, TreeParallelMCTS
+from repro.core import TreeConfig
 from repro.envs import GomokuEnv
 from repro.envs.policy_net import NNSimBackend, apply, init_params
+from repro.service import SearchClient, SearchRequest
+from repro.sim import CachedSimBackend, SimServer
 
 CFG = TreeConfig(X=384, F=36, D=5, beta=5.0, score_fn="puct",
                  leaf_mode="unexpanded", expand_all=True)
 
 
-def play_game(env, params, p, seed, max_moves=36, supersteps=8):
-    backend = NNSimBackend(env, params)
-    s = env.initial_state(seed)
-    states, players = [], []
-    mcts = TreeParallelMCTS(CFG, env, backend, p=p, executor="faithful",
-                            alternating_signs=True, seed=seed)
-    for _ in range(max_moves):
-        mcts.root_state = s
-        mcts.st.flush(s)
-        mcts.tree = mcts.exec.init(env.num_actions(s))
-        for _ in range(supersteps):
-            mcts.superstep()
-        a = mcts.exec.best_action(mcts.tree)
-        states.append(s.copy())
-        players.append(s[0])
-        s, r, term = env.step(s, a)
-        if term:
-            break
-    winner = s[2]
-    # value targets from each mover's perspective
-    z = [0.0 if winner == 0 else (1.0 if pl == winner else -1.0)
-         for pl in players]
-    return states, z, winner
+def play_games(env, params, n_games, p, G=4, budget=8, max_batch=64,
+               cache_capacity=4096, uid_base=0):
+    """Self-play n_games concurrently through one SearchClient; returns
+    (states, value targets, winners) replayed from the committed moves."""
+    sim = CachedSimBackend(
+        SimServer(NNSimBackend(env, params), max_batch=max_batch,
+                  default_priority="self-play"),
+        capacity=cache_capacity)
+    client = SearchClient(env, sim_backend=sim, G=G, p=p,
+                          executor="faithful", default_cfg=CFG,
+                          alternating_signs=True)
+    try:
+        handles = [client.submit(
+            SearchRequest(uid=uid_base + g, seed=g, budget=budget,
+                          moves=env.max_actions))
+            for g in range(n_games)]
+        results = [h.result() for h in handles]
+    finally:
+        client.close()
+    buf_s, buf_z, winners = [], [], []
+    for g, res in enumerate(results):
+        s = env.initial_state(g)
+        states, players = [], []
+        for a in res.actions:
+            states.append(s.copy())
+            players.append(s[0])
+            s, _, term = env.step(s, a)
+            if term:
+                break
+        winner = s[2]
+        buf_s += states
+        buf_z += [0.0 if winner == 0 else (1.0 if pl == winner else -1.0)
+                  for pl in players]
+        winners.append(winner)
+    return buf_s, buf_z, winners
 
 
 def train_net(params, states, z, lr=1e-2, epochs=30):
@@ -66,18 +87,24 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--games", type=int, default=2)
     ap.add_argument("--p", type=int, default=8)
+    ap.add_argument("--G", type=int, default=4,
+                    help="concurrent game slots per self-play round")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="SimServer microbatch size")
     args = ap.parse_args()
 
     env = GomokuEnv()
     params = init_params(jax.random.PRNGKey(0))
     buf_s, buf_z = [], []
-    for g in range(args.games):
-        states, z, winner = play_game(env, params, args.p, seed=g)
+    for rnd in range(args.games):
+        states, z, winners = play_games(
+            env, params, n_games=1, p=args.p, G=args.G,
+            max_batch=args.max_batch, uid_base=rnd * args.G)
         buf_s += states
         buf_z += z
         params, loss = train_net(params, buf_s, buf_z)
-        print(f"game {g}: {len(states)} moves, winner={winner:+.0f}, "
-              f"value-loss={loss:.4f}")
+        print(f"game {rnd}: {len(states)} moves, "
+              f"winner={winners[0]:+.0f}, value-loss={loss:.4f}")
     print("self-play loop complete")
 
 

@@ -1,14 +1,18 @@
-"""Token-level MCTS decoding with an LM simulation backend.
+"""Token-level MCTS decoding with an LM simulation backend, fully served.
 
 The paper's Gomoku benchmark replaces rollouts with DNN inference; this
 example pushes that to its modern conclusion: the simulation backend is a
 language model's serve path, and MCTS plans over next-token actions —
 the tree machinery (UCT on accelerator, ST on host) is untouched.
 
-Environment: states are token sequences (stored in the ST); actions are
-the top-F tokens proposed by the LM at each node; the simulation value is
-the LM's average log-likelihood of a greedy continuation (a standard
-search-decoding score).
+The workload runs through the production stack end to end: the decode is
+one multi-move SearchRequest on a SearchClient at priority class
+"interactive", tokens stream out of SearchHandle.moves() as each reroot
+commits, and simulation batches flow through repro.sim — a SimServer
+microbatches the tree's leaf rows, and LMContinuationBackend scores each
+row's greedy continuation by mean token log-prob, decoding ALL rows
+concurrently through one ContinuousBatcher pool (serving/batcher.py)
+instead of the historical per-row forward loop.
 
   PYTHONPATH=src python examples/lm_mcts_decode.py --tokens 6
 """
@@ -16,75 +20,12 @@ search-decoding score).
 import argparse
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import configs
-from repro.core import TreeConfig, TreeParallelMCTS
+from repro.core import TreeConfig
 from repro.models import lm
-
-MAXLEN = 48
-
-
-class LMTreeEnv:
-    """Token-sequence environment over a (smoke) LM."""
-
-    state_dtype = np.float32
-
-    def __init__(self, cfg, params, fanout=6, horizon=5):
-        self.cfg, self.params, self.F, self.horizon = cfg, params, fanout, horizon
-        self.state_shape = (MAXLEN + 1,)   # [len, tokens...]
-        self.max_actions = fanout
-        self._fwd = jax.jit(
-            lambda p, t: lm.forward(cfg, p, t, impl="naive")[0])
-
-    def initial_state(self, seed):
-        s = np.zeros(MAXLEN + 1, np.float32)
-        s[0] = 1
-        s[1] = 1 + seed % 7
-        return s
-
-    def tokens(self, state):
-        n = int(state[0])
-        return np.asarray(state[1 : 1 + n], np.int64)
-
-    def top_actions(self, state):
-        t = jnp.asarray(self.tokens(state))[None]
-        logits = np.asarray(self._fwd(self.params, t))[0, -1]
-        return np.argsort(-logits)[: self.F]
-
-    def num_actions(self, state):
-        return 0 if int(state[0]) >= MAXLEN - self.horizon else self.F
-
-    def step(self, state, a):
-        tok = int(self.top_actions(state)[a])
-        s = state.copy()
-        n = int(s[0])
-        s[1 + n] = tok
-        s[0] = n + 1
-        return s, 0.0, int(s[0]) >= MAXLEN - self.horizon
-
-
-class LMSimBackend:
-    """Simulation = greedy LM continuation scored by mean log-prob."""
-
-    def __init__(self, env: LMTreeEnv):
-        self.env = env
-
-    def evaluate(self, states):
-        vals = np.zeros(len(states), np.float32)
-        for i, s in enumerate(states):
-            toks = self.env.tokens(s)
-            lp = 0.0
-            t = jnp.asarray(toks)[None]
-            for _ in range(self.env.horizon):
-                logits = np.asarray(self.env._fwd(self.env.params, t))[0, -1]
-                p = logits - np.logaddexp.reduce(logits)
-                nxt = int(np.argmax(p))
-                lp += p[nxt]
-                t = jnp.concatenate([t, jnp.asarray([[nxt]])], axis=1)
-            vals[i] = lp / self.env.horizon
-        return vals, None
+from repro.service import SearchClient, SearchRequest
+from repro.sim import LMContinuationBackend, LMTreeEnv, SimServer
 
 
 def main():
@@ -92,22 +33,30 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--tokens", type=int, default=6)
     ap.add_argument("--p", type=int, default=4)
+    ap.add_argument("--pool-size", type=int, default=8,
+                    help="ContinuousBatcher decode pool (LM microbatch)")
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch, smoke=True)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     env = LMTreeEnv(cfg, params)
+    sim = SimServer(LMContinuationBackend(env, pool_size=args.pool_size),
+                    max_batch=args.p, default_priority="interactive")
     tree_cfg = TreeConfig(X=96, F=env.F, D=4)
-    mcts = TreeParallelMCTS(tree_cfg, env, LMSimBackend(env), p=args.p,
-                            executor="faithful")
 
-    seq = [int(env.initial_state(0)[1])]
-    for t in range(args.tokens):
-        a, _, term = mcts.run_step(max_supersteps=10)
-        seq.append(int(mcts.root_state[int(mcts.root_state[0])]))
-        print(f"token {t}: planned action {a}; sequence so far {seq}")
-        if term:
-            break
+    with SearchClient(env, sim_backend=sim, G=1, p=args.p,
+                      executor="faithful", default_cfg=tree_cfg) as client:
+        handle = client.submit(SearchRequest(
+            uid=0, seed=0, budget=8, moves=args.tokens))
+        state = env.initial_state(0)
+        seq = [int(state[1])]
+        for ev in handle.moves():
+            state, _, term = env.step(state, ev.action)
+            seq.append(int(state[int(state[0])]))
+            print(f"token {ev.move_index}: planned action {ev.action}; "
+                  f"sequence so far {seq}")
+            if term:
+                break
     print("decoded:", seq)
 
 

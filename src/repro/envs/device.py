@@ -123,6 +123,17 @@ def has_device_sim(sim) -> bool:
     return callable(getattr(sim, "evaluate_device", None))
 
 
+def has_async_sim(sim) -> bool:
+    """True when the backend exposes the non-blocking submit/collect
+    split (repro.sim: SimServer, CachedSimBackend): submit enqueues rows
+    into the serving admission window and returns a ticket; collect
+    redeems it.  Callers holding several pools' rows submit them ALL
+    before collecting, so a microbatching server coalesces across pools
+    even when cross-pool fusion is off."""
+    return (callable(getattr(sim, "submit", None))
+            and callable(getattr(sim, "collect", None)))
+
+
 def resolvable_device(env, states, actions):
     """bool[B] — rows whose transition the device twin can resolve.
     Envs without the hook are fully resolvable."""

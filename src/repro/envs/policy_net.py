@@ -63,27 +63,62 @@ class NNSimBackend:
     evaluate() returns values from the player-to-move perspective and
     priors over *legal actions in legal order* (the driver's action
     indexing), padded to max_actions.
+
+    The forward pass is exposed as a non-blocking ``dispatch``/
+    ``finalize`` split (mirroring core.expand's submit/collect): dispatch
+    starts the jitted forward and returns the in-flight device arrays
+    without a host sync; finalize device_gets them and runs the host
+    post-processing.  ``evaluate`` is dispatch + finalize back to back —
+    repro.sim.server.SimServer uses the split to keep device inference in
+    flight across microbatch assembly.
     """
 
     def __init__(self, env, params: dict):
         self.env, self.params = env, params
 
-    def evaluate(self, states: np.ndarray):
+    def dispatch(self, states: np.ndarray):
+        """Start the forward for a batch; JAX dispatch is async, so this
+        returns immediately with the in-flight (values, logits) arrays."""
         B = len(states)
         boards = states[:, 3 : 3 + _CELLS].reshape(B, _BOARD, _BOARD)
-        to_move = states[:, 0:1]
-        canon = boards * to_move[:, :, None]
-        values, logits = jax.device_get(
-            _infer(self.params, jnp.asarray(canon, jnp.float32)))
-        vals = np.array(values, np.float32)  # copy: device_get is read-only
+        canon = boards * states[:, 0:1][:, :, None]
+        return _infer(self.params, jnp.asarray(canon, jnp.float32))
+
+    def finalize(self, token, states: np.ndarray):
+        """Block on a dispatched forward and post-process: terminal rows
+        get their exact game value (no priors); the rest get a masked
+        softmax over legal cells, compacted into legal order.
+
+        One vectorized numpy pass over all rows (the historical per-row
+        Python loop was O(B) on the hot simulation path).  Each row's
+        result is a pure function of that row alone — masked max, exp,
+        and a fixed-width 36-cell row sum — which is the property the
+        serving layer's bit-identity guarantees rest on (batch
+        composition, caching, and padding can never change a row's
+        result).  Values are unchanged from the loop; priors agree up to
+        summation-grouping ulps (the loop summed the gathered legal
+        values, this sums the fixed-width masked row)."""
+        values, logits = jax.device_get(token)
+        B = len(states)
+        cells = states[:, 3 : 3 + _CELLS]
+        term = states[:, 1] != 0
+        legal = (cells == 0) & ~term[:, None]
+        z = np.where(legal, logits, np.float32(-np.inf))
+        m = z.max(axis=1)
+        mm = np.where(np.isfinite(m), m, np.float32(0.0))
+        ez = np.exp(z - mm[:, None])          # exact 0.0 at masked cells
+        denom = ez.sum(axis=1)
+        soft = ez / np.where(denom > 0, denom, np.float32(1.0))[:, None]
         pri = np.zeros((B, self.env.max_actions), np.float32)
-        for i in range(B):
-            if states[i, 1]:  # terminal: exact value, no priors
-                w, me = states[i, 2], states[i, 0]
-                vals[i] = 0.0 if w == 0 else (1.0 if w == me else -1.0)
-                continue
-            legal = np.flatnonzero(states[i, 3 : 3 + _CELLS] == 0)
-            z = logits[i, legal]
-            z = np.exp(z - z.max())
-            pri[i, : len(legal)] = z / z.sum()
+        # scatter each legal cell's mass to its legal-order column
+        pos = np.cumsum(cells == 0, axis=1) - 1
+        ii, jj = np.nonzero(legal)
+        pri[ii, pos[ii, jj]] = soft[ii, jj]
+        w, me = states[:, 2], states[:, 0]
+        tv = np.where(w == 0, np.float32(0.0),
+                      np.where(w == me, np.float32(1.0), np.float32(-1.0)))
+        vals = np.where(term, tv, values).astype(np.float32, copy=False)
         return vals, pri
+
+    def evaluate(self, states: np.ndarray):
+        return self.finalize(self.dispatch(states), states)

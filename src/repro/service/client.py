@@ -197,7 +197,7 @@ class SearchClient:
     def __init__(
         self,
         env: Environment,
-        sim: SimulationBackend,
+        sim: Optional[SimulationBackend] = None,
         G: int = 4,
         p: int = 8,
         executor: str = "faithful",
@@ -221,13 +221,31 @@ class SearchClient:
         shard_devices: Optional[list] = None,
         overlap: bool = False,
         n_gangs: int = 2,
+        sim_backend: Optional[SimulationBackend] = None,
     ):
+        # `sim_backend` is the serving-subsystem spelling (repro.sim
+        # SimServer / CachedSimBackend / LMContinuationBackend); `sim`
+        # the historical positional.  One of them, never both.
+        if sim_backend is not None:
+            if sim is not None:
+                raise ValueError(
+                    "pass the simulation backend as `sim` OR "
+                    "`sim_backend`, not both")
+            sim = sim_backend
+        if sim is None:
+            raise ValueError("SearchClient needs a simulation backend: "
+                             "pass `sim` or `sim_backend`")
         self.tracer: Optional[Tracer] = (
             trace if isinstance(trace, Tracer)
             else Tracer(capacity=trace_capacity) if trace else None)
         self.registry: Optional[MetricsRegistry] = (
             metrics if isinstance(metrics, MetricsRegistry)
             else MetricsRegistry() if metrics else None)
+        # serving backends carry their own telemetry (sim_server_*,
+        # sim_cache_*, serving_*): rebind it onto this client's registry
+        # so metrics() renders one coherent snapshot
+        if self.registry is not None and hasattr(sim, "bind_metrics"):
+            sim.bind_metrics(self.registry)
         self.core = SchedulerCore(
             env, sim, G, p, executor=executor, default_cfg=default_cfg,
             policy=policy, fuse_across_pools=fuse_across_pools,

@@ -958,7 +958,7 @@ class ArenaPool:
             pend = self._collect_inflight()
             with self.trace.span("simulate", cat="phase", tid=self._track,
                                  rows=len(pend.sim_states), drain=True):
-                values, priors = self.sim.evaluate(pend.sim_states)
+                values, priors = self._sim_evaluate(pend.sim_states)
             self.finish_superstep(pend, values, priors)
             n += 1
         return n
@@ -1101,6 +1101,18 @@ class ArenaPool:
         if pend.tok is not None:
             self.trace.end(pend.tok)
 
+    def _sim_evaluate(self, states):
+        """One simulation batch, routed through the backend's
+        non-blocking submit/collect split when it has one (repro.sim
+        SimServer / CachedSimBackend) so every pool-side call site feeds
+        the same serving admission window; identical results either way
+        (for the split backends evaluate() IS submit + collect)."""
+        from repro.envs.device import has_async_sim
+
+        if has_async_sim(self.sim):
+            return self.sim.collect(self.sim.submit(states))
+        return self.sim.evaluate(states)
+
     # ---- one fused superstep over all occupied slots ----
     def superstep(self) -> bool:
         pend = self.begin_superstep()
@@ -1109,7 +1121,7 @@ class ArenaPool:
         t2 = time.perf_counter()
         with self.trace.span("simulate", cat="phase", tid=self._track,
                              rows=len(pend.sim_states)):
-            values, priors = self.sim.evaluate(pend.sim_states)
+            values, priors = self._sim_evaluate(pend.sim_states)
         t_sim = time.perf_counter() - t2
         self.finish_superstep(pend, values, priors, t_sim=t_sim)
         return True
@@ -1323,7 +1335,7 @@ class ArenaPool:
                 t_intree=t1 - t0, t_host=t2 - t1, tok=tok,
                 compacted=on_sub)
             t3 = time.perf_counter()
-            values, priors = self.sim.evaluate(sim_states)
+            values, priors = self._sim_evaluate(sim_states)
             self.finish_superstep(pend, values, priors,
                                   t_sim=time.perf_counter() - t3)
             return n + 1

@@ -70,6 +70,7 @@ import numpy as np
 
 from repro.core.expand import ExpansionEngine
 from repro.core.mcts import Environment, SimulationBackend
+from repro.envs.device import has_async_sim
 from repro.core.tree import TreeConfig, bucket_key, canonical_config
 from repro.obs.metrics import NULL_REGISTRY
 from repro.obs.trace import NULL_TRACER
@@ -534,6 +535,25 @@ class SchedulerCore:
                     pend, values[off:off + r], pr,
                     t_sim=t_sim * r / max(len(fused), 1), own_batch=False)
                 off += r
+        elif has_async_sim(self.sim) and len(pending) > 1:
+            # microbatching backend, fusion off: submit EVERY pool's rows
+            # first, then collect — the server's admission window packs
+            # rows from different pools into shared fixed-shape
+            # microbatches (and dispatch-capable backends already have
+            # device programs in flight while later submits assemble).
+            # Per-row results are batch-composition independent
+            # (sim.server padding), so this is bit-identical to the
+            # per-pool evaluate loop below.
+            tickets = [(pool, pend, self.sim.submit(pend.sim_states))
+                       for pool, pend in pending]
+            for pool, pend, ticket in tickets:
+                t0 = time.perf_counter()
+                with pool.trace.span("simulate", cat="phase",
+                                     tid=pool._track,
+                                     rows=len(pend.sim_states)):
+                    values, priors = self.sim.collect(ticket)
+                t_sim = time.perf_counter() - t0
+                pool.finish_superstep(pend, values, priors, t_sim=t_sim)
         else:
             for pool, pend in pending:
                 t0 = time.perf_counter()

@@ -8,7 +8,13 @@ preallocated cache (so the jitted decode step never retraces), with
   * slot-wise admission: new requests prefill into a free slot's cache
     region while other slots keep decoding (continuous batching);
   * per-slot position tracking and eviction on EOS/max-tokens;
-  * deterministic greedy decoding (swap in a sampler as needed).
+  * deterministic greedy decoding (swap in a sampler as needed);
+  * backpressure: with ``max_pending`` set, a submit that would overgrow
+    the waiting queue makes the SUBMITTER pay service time (it steps the
+    pool until the backlog fits) instead of growing an unbounded queue —
+    no request is ever dropped;
+  * telemetry via obs.metrics: pool occupancy and queue depth gauges,
+    admission/completion/eviction counters (``serving_*``).
 
 Prefill uses the single-sequence path (B=1 rows are written into the
 slot), so admission cost is O(prompt) and does not stall the pool more
@@ -20,13 +26,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import lm, steps
+from repro.obs.metrics import NULL_REGISTRY
 
 
 @dataclasses.dataclass
@@ -37,15 +44,25 @@ class Request:
     eos_id: Optional[int] = None
     # filled by the batcher:
     tokens: list = dataclasses.field(default_factory=list)
+    logprobs: list = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     done_at: float = 0.0
 
 
+def _logprob(logits_row: np.ndarray, tok: int) -> float:
+    """Log-probability of one token under a logits row (host-side)."""
+    l = np.asarray(logits_row, np.float32)
+    return float(l[tok] - np.logaddexp.reduce(l))
+
+
 class ContinuousBatcher:
     def __init__(self, cfg, params, pool_size: int = 8, max_seq: int = 256,
-                 impl: str = "naive"):
+                 impl: str = "naive", max_pending: Optional[int] = None,
+                 record_logprobs: bool = False, metrics=None):
         self.cfg, self.params = cfg, params
         self.B, self.max_seq = pool_size, max_seq
+        self.max_pending = max_pending
+        self.record_logprobs = record_logprobs
         self.caches = lm.init_caches(cfg, pool_size, max_seq)
         # scratch single-slot cache for admissions, allocated once: prefill
         # is functional (returns a fresh cache), so the zeroed scratch is
@@ -60,11 +77,40 @@ class ContinuousBatcher:
         self.queue: list[Request] = []
         self.completed: list[Request] = []
         self.decode_steps = 0
+        self.bind_metrics(metrics)
+
+    def bind_metrics(self, metrics) -> None:
+        reg = NULL_REGISTRY if metrics is None else metrics
+        self._m_occupancy = reg.gauge(
+            "serving_pool_occupancy", "occupied decode slots / pool size")
+        self._m_queue = reg.gauge(
+            "serving_queue_depth", "requests waiting for a decode slot")
+        self._m_admitted = reg.counter(
+            "serving_admitted_total", "requests prefilled into a slot")
+        self._m_completed = reg.counter(
+            "serving_completed_total", "requests finished decoding")
+        self._m_evicted = {reason: reg.counter(
+            "serving_evictions_total", "slot evictions by cause",
+            reason=reason) for reason in ("max_tokens", "eos", "max_seq")}
+
+    def _occupied(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    def _set_gauges(self) -> None:
+        self._m_occupancy.set(self._occupied() / self.B)
+        self._m_queue.set(len(self.queue))
 
     # ---- admission ----
     def submit(self, req: Request):
         req.submitted_at = time.perf_counter()
         self.queue.append(req)
+        # backpressure: never drop — the submitter drives the pool until
+        # its request fits the waiting-queue bound
+        if self.max_pending is not None:
+            while len(self.queue) > self.max_pending:
+                if not self.step():
+                    break
+        self._set_gauges()
 
     def _admit(self):
         for slot in range(self.B):
@@ -80,6 +126,11 @@ class ContinuousBatcher:
             self.pos[slot] = len(req.prompt)
             self.cur_tok[slot, 0] = int(jnp.argmax(logits[0]))
             req.tokens.append(int(self.cur_tok[slot, 0]))
+            if self.record_logprobs:
+                req.logprobs.append(
+                    _logprob(np.asarray(logits[0]), req.tokens[-1]))
+            self._m_admitted.inc()
+        self._set_gauges()
 
     # ---- decode tick ----
     def step(self):
@@ -93,21 +144,31 @@ class ContinuousBatcher:
         logits, self.caches = self._decode(
             self.params, self.caches, jnp.asarray(self.cur_tok), posv)
         self.decode_steps += 1
+        host_logits = np.asarray(logits) if self.record_logprobs else None
         nxt = np.asarray(jnp.argmax(logits, -1), np.int32)
         for slot, req in enumerate(self.slots):
             if req is None:
                 continue
             tok = int(nxt[slot])
             req.tokens.append(tok)
+            if host_logits is not None:
+                req.logprobs.append(_logprob(host_logits[slot], tok))
             self.pos[slot] += 1
             self.cur_tok[slot, 0] = tok
-            done = (len(req.tokens) >= req.max_new_tokens
-                    or (req.eos_id is not None and tok == req.eos_id)
-                    or self.pos[slot] >= self.max_seq - 1)
-            if done:
+            reason = None
+            if len(req.tokens) >= req.max_new_tokens:
+                reason = "max_tokens"
+            elif req.eos_id is not None and tok == req.eos_id:
+                reason = "eos"
+            elif self.pos[slot] >= self.max_seq - 1:
+                reason = "max_seq"
+            if reason is not None:
                 req.done_at = time.perf_counter()
                 self.completed.append(req)
                 self.slots[slot] = None
+                self._m_completed.inc()
+                self._m_evicted[reason].inc()
+        self._set_gauges()
         return True
 
     def run(self, max_steps: int = 1000):

@@ -1,0 +1,32 @@
+"""repro.sim — the simulation serving subsystem.
+
+The paper's CPU/FPGA split keeps Simulation on the host workers; this
+package makes that side a real subsystem: SimServer microbatches every
+caller's rows behind one jitted forward (priority-classed admission
+window, fixed-shape padding, non-blocking submit/collect),
+SimCache/CachedSimBackend short-circuit re-expanded positions, and
+sim.lm serves LM-decode-as-tree-search through the continuous batcher.
+
+Wire any of them in with ``SearchClient(env, sim_backend=...)``.
+
+LM pieces (LMTreeEnv, LMContinuationBackend) are imported lazily — they
+pull in the model stack, which non-LM serving paths never need.
+"""
+
+from repro.sim.cache import CachedSimBackend, SimCache
+from repro.sim.server import PRIORITY_CLASSES, PendingBatch, SimServer
+
+__all__ = [
+    "CachedSimBackend", "LMContinuationBackend", "LMTreeEnv",
+    "PRIORITY_CLASSES", "PendingBatch", "SimCache", "SimServer",
+]
+
+_LM_NAMES = ("LMTreeEnv", "LMContinuationBackend", "MAXLEN")
+
+
+def __getattr__(name):
+    if name in _LM_NAMES:
+        from repro.sim import lm
+
+        return getattr(lm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

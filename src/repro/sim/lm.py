@@ -1,0 +1,127 @@
+"""LM-decode-as-tree-search: the environment and simulation backend that
+plan over next-token actions with a language model.
+
+Moved out of examples/lm_mcts_decode.py and made a served workload:
+
+  * LMTreeEnv — states are token sequences (stored in the StateTable);
+    actions are the top-F tokens the LM proposes at each node; the
+    horizon caps tree depth.
+  * LMContinuationBackend — simulation value = the LM's mean token
+    log-prob over a greedy continuation, but BATCHED: every row's
+    continuation decodes together through ONE ContinuousBatcher pool
+    (serving/batcher.py, the continuous-batching substrate) instead of
+    the old example's per-row sequential forward loop.  The batcher's
+    pool size IS the LM microbatch knob the service_nn_backend_lm_*
+    BENCH rows sweep.
+
+Determinism: the batcher's decode is greedy and its pool schedule is a
+pure function of the submitted request stream, so evaluate() is exactly
+reproducible for a given states batch — the property the executor
+matrix's bit-identity legs rest on.
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+from repro.serving.batcher import ContinuousBatcher, Request
+
+__all__ = ["MAXLEN", "LMTreeEnv", "LMContinuationBackend"]
+
+MAXLEN = 48
+
+
+class LMTreeEnv:
+    """Token-sequence environment over a (smoke) LM.
+
+    Served end to end via ``SearchClient(env, sim_backend=...)`` — see
+    examples/lm_mcts_decode.py for the decode loop over SearchHandle
+    moves.
+    """
+
+    state_dtype = np.float32
+
+    def __init__(self, cfg, params, fanout: int = 6, horizon: int = 5):
+        import jax
+
+        from repro.models import lm
+
+        self.cfg, self.params = cfg, params
+        self.F, self.horizon = fanout, horizon
+        self.state_shape = (MAXLEN + 1,)   # [len, tokens...]
+        self.max_actions = fanout
+        self._fwd = jax.jit(
+            lambda p, t: lm.forward(cfg, p, t, impl="naive")[0])
+
+    def initial_state(self, seed: int) -> np.ndarray:
+        s = np.zeros(MAXLEN + 1, np.float32)
+        s[0] = 1
+        s[1] = 1 + seed % 7
+        return s
+
+    def tokens(self, state: np.ndarray) -> np.ndarray:
+        n = int(state[0])
+        return np.asarray(state[1 : 1 + n], np.int64)
+
+    def top_actions(self, state: np.ndarray) -> np.ndarray:
+        import jax.numpy as jnp
+
+        t = jnp.asarray(self.tokens(state))[None]
+        logits = np.asarray(self._fwd(self.params, t))[0, -1]
+        return np.argsort(-logits)[: self.F]
+
+    def num_actions(self, state: np.ndarray) -> int:
+        return 0 if int(state[0]) >= MAXLEN - self.horizon else self.F
+
+    def step(self, state: np.ndarray, a: int):
+        tok = int(self.top_actions(state)[a])
+        s = state.copy()
+        n = int(s[0])
+        s[1 + n] = tok
+        s[0] = n + 1
+        return s, 0.0, int(s[0]) >= MAXLEN - self.horizon
+
+
+class LMContinuationBackend:
+    """Simulation = greedy LM continuation scored by mean log-prob,
+    decoded for ALL rows concurrently through one ContinuousBatcher pool.
+
+    ``pool_size`` is the LM serving microbatch: rows beyond it queue and
+    admit continuously as earlier continuations finish (the batcher's
+    slot-wise admission), so a G×p simulation batch costs
+    ceil(B / pool_size) waves of `horizon` decode steps instead of B
+    sequential full-forward loops.
+    """
+
+    def __init__(self, env: LMTreeEnv, pool_size: int = 8,
+                 impl: str = "naive", metrics=None):
+        self.env = env
+        self._uid = itertools.count()
+        self.batcher = ContinuousBatcher(
+            env.cfg, env.params, pool_size=pool_size,
+            max_seq=MAXLEN + env.horizon + 2, impl=impl,
+            record_logprobs=True, metrics=metrics)
+
+    def bind_metrics(self, metrics) -> None:
+        self.batcher.bind_metrics(metrics)
+
+    def evaluate(self, states: np.ndarray):
+        B = len(states)
+        reqs = [Request(uid=next(self._uid),
+                        prompt=self.env.tokens(states[i]).astype(np.int32),
+                        max_new_tokens=self.env.horizon)
+                for i in range(B)]
+        self.batcher.completed = []
+        for r in reqs:
+            self.batcher.submit(r)
+        done = self.batcher.run(
+            max_steps=self.batcher.decode_steps + (B + 2) * self.env.horizon)
+        assert len(done) == B, (
+            f"LM continuation pool drained {len(done)}/{B} rows")
+        by_uid = {r.uid: r for r in done}
+        vals = np.asarray(
+            [np.float32(sum(by_uid[r.uid].logprobs) / self.env.horizon)
+             for r in reqs], np.float32)
+        return vals, None

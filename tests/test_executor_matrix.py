@@ -622,3 +622,77 @@ def test_overlap_trace_exposes_gang_tracks():
             "simulate"} <= names
     assert "service_overlap_busy_ratio" in metrics
     assert "service_overlap_efficiency" in metrics
+
+
+# ---------------------------------------------------------------------------
+# NN-backed differential leg (repro.sim): the served DNN simulation path
+# — SimServer microbatching + transposition cache — through SearchClient
+# on every executor.  SimServer pads every microbatch to a fixed shape,
+# so per-row inference is batch-composition independent; therefore
+# (a) cache-on must equal cache-off bit for bit on EVERY executor (the
+# cache only changes which rows reach the forward), and (b) the
+# BIT_COMPATIBLE executors must agree with reference under the NN
+# backend exactly as they do under the bandit oracle.
+# ---------------------------------------------------------------------------
+
+NN_CFG = TreeConfig(X=128, F=36, D=5, beta=5.0, score_fn="puct",
+                    leaf_mode="unexpanded", expand_all=True)
+NN_SCHEDULE = [dict(uid=i, seed=i, budget=2, moves=1 + i % 2,
+                    keep_tree=True) for i in range(3)]
+_NN_RESULTS: dict = {}
+_NN_PARAMS: list = []
+
+
+def _run_nn(executor: str, cache: bool):
+    key = (executor, cache)
+    if key in _NN_RESULTS:
+        return _NN_RESULTS[key]
+    jax = pytest.importorskip("jax")
+    from repro.envs import GomokuEnv
+    from repro.envs.policy_net import NNSimBackend, init_params
+    from repro.sim import CachedSimBackend, SimServer
+
+    if not _NN_PARAMS:
+        _NN_PARAMS.append(init_params(jax.random.PRNGKey(0)))
+    from repro.obs import MetricsRegistry
+
+    env = GomokuEnv()
+    reg = MetricsRegistry()
+    sim = SimServer(NNSimBackend(env, _NN_PARAMS[0]), max_batch=16)
+    if cache:
+        sim = CachedSimBackend(sim, capacity=512, metrics=reg)
+    cl = SearchClient(env, sim_backend=sim, G=2, p=P, executor=executor,
+                      default_cfg=NN_CFG, alternating_signs=True)
+    try:
+        handles = [cl.submit(SearchRequest(**kw)) for kw in NN_SCHEDULE]
+        done = {h.uid: h.result() for h in handles}
+    finally:
+        cl.close()
+    if cache:
+        # the leg must actually exercise the cache (re-expansions hit)
+        assert reg.get("sim_cache_hits_total").value > 0
+    _NN_RESULTS[key] = done
+    return done
+
+
+@pytest.mark.parametrize("executor", EXECUTOR_NAMES)
+def test_nn_backend_cache_is_semantics_free(executor):
+    """Acceptance: the transposition cache never changes results — the
+    NN-backed schedule with CachedSimBackend equals the cache-off run
+    bit for bit on every executor (relaxed/wavefront included: whatever
+    an executor computes, caching must not perturb it)."""
+    _assert_requests_identical(_run_nn(executor, True),
+                               _run_nn(executor, False),
+                               f"nn-cache/{executor}")
+
+
+@pytest.mark.parametrize("executor", [e for e in EXECUTOR_NAMES
+                                      if e in BIT_COMPATIBLE])
+def test_nn_backend_matches_reference(executor):
+    """Acceptance: NN-backed runs are bit-identical across the
+    bit-compatible executors for a fixed request stream — the serving
+    stack (microbatch padding + fixed-shape forward) keeps per-row
+    inference results executor-agnostic."""
+    _assert_requests_identical(_run_nn(executor, False),
+                               _run_nn("reference", False),
+                               f"nn-vs-reference/{executor}")
